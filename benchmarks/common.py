@@ -1,0 +1,86 @@
+"""Shared benchmark harness utilities.
+
+All benchmarks run the REAL plane implementations at reduced scale on CPU
+and report two measurements per configuration:
+
+  * ``us_per_call``  — measured wall time per access batch (CPU; relative
+    comparisons between planes are meaningful, absolutes are not TPU)
+  * ``modeled far-memory traffic`` — bytes moved between tiers, the
+    hardware-independent quantity behind the paper's I/O-amplification
+    results (plus maintenance metadata costs such as LRU scans)
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PlaneConfig, access, baselines, create, evacuate
+from repro.core import plane as plane_lib
+
+N_OBJS = 2048
+OBJ_DIM = 16
+PAGE_OBJS = 8
+
+
+def plane_config(local_ratio: float, *, n_objs=N_OBJS, obj_dim=OBJ_DIM,
+                 page_objs=PAGE_OBJS, car_threshold=0.8,
+                 lru_scan_budget=0) -> PlaneConfig:
+    data_pages = -(-n_objs // page_objs)
+    frames = max(int(data_pages * local_ratio), 6)
+    return PlaneConfig(
+        num_objs=n_objs, obj_dim=obj_dim, page_objs=page_objs,
+        num_frames=frames, num_vpages=data_pages * 3,
+        car_threshold=car_threshold, readahead=2,
+        lru_scan_budget=lru_scan_budget)
+
+
+def make_plane(kind: str, cfg: PlaneConfig):
+    data = jnp.zeros((cfg.num_objs, cfg.obj_dim), cfg.dtype)
+    s = create(cfg, data)
+    if kind == "hybrid":
+        fn = jax.jit(partial(access, cfg))
+    elif kind == "paging":
+        fn = jax.jit(partial(baselines.paging_access, cfg))
+    elif kind == "object":
+        fn = jax.jit(partial(baselines.object_access, cfg))
+    else:
+        raise ValueError(kind)
+    return s, fn
+
+
+def run_workload(kind: str, cfg: PlaneConfig, workload, *,
+                 evac_every: int = 0):
+    """Returns (us_per_batch, stats_dict, final_state)."""
+    s, fn = make_plane(kind, cfg)
+    evac = jax.jit(partial(evacuate, cfg)) if kind == "hybrid" else None
+    batches = list(workload)
+    # warmup / compile
+    s, out = fn(s, jnp.asarray(batches[0]))
+    out.block_until_ready()
+    t0 = time.time()
+    for i, ids in enumerate(batches):
+        s, out = fn(s, jnp.asarray(ids))
+        if evac is not None and evac_every and (i + 1) % evac_every == 0:
+            s = evac(s)
+    out.block_until_ready()
+    dt = time.time() - t0
+    stats = {k: int(v) for k, v in jax.device_get(s.stats)._asdict().items()}
+    stats["paging_fraction"] = float(plane_lib.paging_fraction(cfg, s))
+    return dt / len(batches) * 1e6, stats, s
+
+
+def traffic_bytes(cfg: PlaneConfig, stats: dict) -> int:
+    """Far-memory bytes moved (both directions)."""
+    return (stats["page_ins"] * cfg.page_bytes
+            + stats["obj_ins"] * cfg.row_bytes
+            + stats["dirty_page_outs"] * cfg.page_bytes
+            + stats["obj_outs"] * cfg.row_bytes)
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Paper Fig. 4: throughput of Atlas (hybrid) vs Fastswap (paging) vs AIFM
+(object) across workloads x local-memory ratios.
+
+Reports per cell: wall us/batch and modeled far-memory traffic (bytes) —
+the qualitative claims under reproduction:
+  * random/skewed workloads: hybrid & object beat paging (I/O amplification)
+  * sequential workloads: hybrid & paging beat object
+  * hybrid >= max(both) within tolerance everywhere
+"""
+from __future__ import annotations
+
+from repro.data import kvworkload
+
+from .common import N_OBJS, emit, plane_config, run_workload, traffic_bytes
+
+RATIOS = [0.13, 0.25, 0.50, 0.75, 1.0]
+WORKLOADS = ["mcd_cl", "mcd_u", "metis", "graph", "df_scan", "ws"]
+PLANES = ["hybrid", "paging", "object"]
+STEPS = 60
+BATCH = 64
+
+
+def run(quick: bool = False):
+    rows = []
+    ratios = [0.25, 1.0] if quick else RATIOS
+    wls = ["mcd_cl", "df_scan"] if quick else WORKLOADS
+    for ratio in ratios:
+        for plane in PLANES:
+            cfg = plane_config(ratio)
+            for wl in wls:
+                gen = kvworkload.WORKLOADS[wl](N_OBJS, BATCH, STEPS, seed=1)
+                us, stats, _ = run_workload(plane, cfg, gen,
+                                            evac_every=16)
+                tb = traffic_bytes(cfg, stats)
+                rows.append((f"fig4/{wl}/{plane}/local={ratio:.2f}", us,
+                             f"traffic_bytes={tb};hits={stats['hits']};"
+                             f"obj_ins={stats['obj_ins']};"
+                             f"page_ins={stats['page_ins']};"
+                             f"lru_scans={stats['lru_scans']};"
+                             f"paging_frac={stats['paging_fraction']:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

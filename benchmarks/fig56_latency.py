@@ -1,0 +1,38 @@
+"""Paper Figs. 5/6: tail latency of the serving engine under the WS
+(grouped zipf) and MCD-CL (zipf+churn) workloads, per plane.
+
+Reports p50/p90/p99 request latency at a fixed offered load, 25% local
+memory (the paper's latency setup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import PlaneConfig
+from repro.data import kvworkload
+from repro.serving.engine import Engine, EngineConfig
+from .common import N_OBJS, emit, plane_config
+
+
+def run(quick: bool = False):
+    rows = []
+    steps = 40 if quick else 120
+    for wl_name, gen_fn in [("ws", kvworkload.grouped),
+                            ("mcd_cl", kvworkload.zipf_churn)]:
+        for plane in ["hybrid", "paging", "object"]:
+            pcfg = plane_config(0.25)
+            data = jnp.zeros((pcfg.num_objs, pcfg.obj_dim))
+            eng = Engine(EngineConfig(plane=plane, batch=64), pcfg, data)
+            rep = eng.run(gen_fn(N_OBJS, 64, steps, seed=2))
+            lat = rep["latency"]
+            rows.append((f"fig56/{wl_name}/{plane}", lat["mean_us"],
+                         f"p50_us={lat['p50_us']:.0f};"
+                         f"p90_us={lat['p90_us']:.0f};"
+                         f"p99_us={lat['p99_us']:.0f};"
+                         f"paging_frac={rep['paging_fraction']:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

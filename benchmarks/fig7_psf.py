@@ -1,0 +1,41 @@
+"""Paper Fig. 7: fraction of pages on the paging path over time — the
+adaptive path-switching trace for MCD-CL (churn), graph iteration and the
+two-phase Metis workload."""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import access, evacuate, paging_fraction
+from repro.data import kvworkload
+from .common import N_OBJS, emit, make_plane, plane_config
+
+
+def run(quick: bool = False):
+    rows = []
+    steps = 40 if quick else 120
+    for wl in ["mcd_cl", "graph", "metis"]:
+        cfg = plane_config(0.25)
+        s, fn = make_plane("hybrid", cfg)
+        evac = jax.jit(partial(evacuate, cfg, garbage_threshold=0.05))
+        trace = []
+        t0 = time.time()
+        for i, ids in enumerate(
+                kvworkload.WORKLOADS[wl](N_OBJS, 64, steps, seed=4)):
+            s, _ = fn(s, jnp.asarray(ids))
+            if (i + 1) % 16 == 0:
+                s = evac(s)
+            if (i + 1) % max(steps // 8, 1) == 0:
+                trace.append(round(float(paging_fraction(cfg, s)), 3))
+        us = (time.time() - t0) / steps * 1e6
+        rows.append((f"fig7/psf_trace/{wl}", us,
+                     "paging_fraction_trace=" + "|".join(map(str, trace))))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

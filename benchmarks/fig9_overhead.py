@@ -1,0 +1,33 @@
+"""Paper Fig. 9 / Table 2: runtime overhead under 100% local memory.
+
+With everything resident, plane costs are pure overhead: the hybrid plane
+pays the read barrier + card profiling; the object plane pays the barrier
++ LRU timestamp maintenance; the paging plane is the near-zero baseline
+(kernel-only bookkeeping).  us/batch ratios reproduce the paper's
+barrier-overhead ordering."""
+from __future__ import annotations
+
+from repro.data import kvworkload
+from .common import N_OBJS, emit, plane_config, run_workload
+
+
+def run(quick: bool = False):
+    rows = []
+    steps = 40 if quick else 100
+    base_us = None
+    for plane in ["paging", "hybrid", "object"]:
+        cfg = plane_config(1.0)            # 100% local
+        gen = kvworkload.zipf_churn(N_OBJS, 64, steps, seed=5)
+        us, stats, _ = run_workload(plane, cfg, gen)
+        if plane == "paging":
+            base_us = us
+        ovh = (us - base_us) / base_us * 100 if base_us else 0.0
+        rows.append((f"fig9/overhead/{plane}", us,
+                     f"overhead_vs_paging_pct={ovh:.1f};"
+                     f"misses={stats['misses']}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

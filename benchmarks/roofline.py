@@ -1,0 +1,75 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = FLOPs / (chips x 197 TFLOP/s)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = wire bytes / (chips-local links x 50 GB/s)
+
+FLOPs/bytes primary source: the analytic model (trip-count exact); the
+HLO-measured numbers (scan-body-once) and the HLO-parsed collective bytes
+(trip-count corrected) are printed alongside as cross-checks.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.analytic import HBM_BW, ICI_BW, PEAK_FLOPS
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun.json")
+
+
+def load(mesh="single"):
+    if not os.path.exists(RESULTS):
+        return []
+    rs = json.load(open(RESULTS))
+    return [r for r in rs if r["mesh"] == mesh and r["status"] == "ok"]
+
+
+def terms(rec) -> dict:
+    a = rec["analytic"]
+    chips = a["chips"]
+    t_c = a["t_compute_s"]
+    t_m = a["t_memory_s"]
+    # collective: prefer the HLO-parsed wire bytes (per device), corrected;
+    # fall back to the analytic estimate
+    coll = rec.get("collectives", {})
+    wire = coll.get("total_wire_bytes_corrected", 0.0)
+    t_x_hlo = wire / ICI_BW if wire else 0.0
+    t_x_ana = a["t_collective_s"]
+    terms_d = {"compute": t_c, "memory": t_m, "collective": t_x_ana}
+    dom = max(terms_d, key=terms_d.get)
+    total = sum(terms_d.values())
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m,
+        "t_collective_s_analytic": t_x_ana, "t_collective_s_hlo": t_x_hlo,
+        "bottleneck": dom,
+        # fraction of the no-overlap step spent at the binding roofline
+        # (1.0 = the binding resource is the whole step; with perfect
+        # compute/comm overlap the step collapses to the dominant term)
+        "roofline_fraction": terms_d[dom] / max(total, 1e-12),
+        "model_flops": a["model_flops_global"],
+        "hlo_flops_per_dev": rec.get("cost_analysis", {}).get("flops", 0),
+    }
+
+
+def run(quick: bool = False):
+    rows = []
+    for rec in sorted(load(), key=lambda r: (r["arch"], r["shape"])):
+        t = terms(rec)
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        us = t["t_compute_s"] * 1e6   # "call" = one step at the compute term
+        rows.append((name, us,
+                     f"t_comp={t['t_compute_s']:.4g};"
+                     f"t_mem={t['t_memory_s']:.4g};"
+                     f"t_coll={t['t_collective_s_analytic']:.4g};"
+                     f"t_coll_hlo={t['t_collective_s_hlo']:.4g};"
+                     f"bottleneck={t['bottleneck']};"
+                     f"roofline_frac={t['roofline_fraction']:.3f}"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs reduced
+sweeps (used by CI); the full run reproduces every figure's data.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default="",
+                   help="comma-separated figure names (fig4,fig56,...)")
+    args = p.parse_args()
+
+    from benchmarks import (fig1c_eviction, fig4_throughput, fig56_latency,
+                            fig7_psf, fig9_overhead, fig10_car,
+                            fig11_hotness, roofline)
+
+    figures = {
+        "fig1c": fig1c_eviction.run,
+        "fig4": fig4_throughput.run,
+        "fig56": fig56_latency.run,
+        "fig7": fig7_psf.run,
+        "fig9": fig9_overhead.run,
+        "fig10": fig10_car.run,
+        "fig11": fig11_hotness.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in figures.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

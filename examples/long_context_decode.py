@@ -1,0 +1,43 @@
+"""Atlas sparse long-context decode: the KV cache lives in the hybrid
+plane; each step scores far-resident page summaries (offload-space
+compute), fetches the top-k pages through the PSF-selected path, and
+attends over the local pool only.
+
+  PYTHONPATH=src python examples/long_context_decode.py
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kvplane
+
+D_SHARDS, KVH, G, Dh, P, NPS = 4, 2, 2, 64, 16, 32   # 4*32*16 = 2048 tokens
+cfg = kvplane.KVPlaneConfig(kv_heads=KVH, head_dim=Dh, page_tokens=P,
+                            num_pages=NPS, num_frames=8, batch=1,
+                            sparse_topk=6, fetch_budget=2, dtype=jnp.float32)
+states = jax.vmap(lambda _: kvplane.init(cfg))(jnp.arange(D_SHARDS))
+
+rng = np.random.default_rng(0)
+lengths = jnp.asarray([0], jnp.int32)
+append = jax.jit(partial(kvplane.append_sharded, cfg))
+print("prefilling 2048 tokens into the far tier...")
+for t in range(D_SHARDS * NPS * P):
+    kv = rng.standard_normal((2, 1, KVH, Dh)).astype(np.float32) * 0.3
+    states = append(states, jnp.asarray(kv[0]), jnp.asarray(kv[1]), lengths)
+    lengths = lengths + 1
+
+decode = jax.jit(partial(kvplane.sharded_sparse_decode, cfg))
+for step in range(12):
+    q = jnp.asarray(rng.standard_normal((1, KVH * G, Dh)), jnp.float32)
+    out, states = decode(states, q, lengths)
+    resident = int((states.page_table >= 0).sum())
+    runtime_pages = int((~states.psf).sum())
+    print(f"step {step:2d}: resident pages {resident:3d}/128  "
+          f"runtime-path pages {runtime_pages:3d}  "
+          f"hot-hint rows {int(states.hot_hint.sum()):4d}  |out|="
+          f"{float(jnp.linalg.norm(out)):.3f}")
+print("\nPages whose attention concentrated on few rows flip to the "
+      "runtime path and re-fetch packed;\nflat pages stay on paging — the "
+      "hybrid data plane at decode time.")

@@ -1,0 +1,157 @@
+"""Compiled-HLO introspection: collective operand bytes with while-body
+trip-count correction.
+
+XLA's ``cost_analysis`` (and a naive text scan) counts a while-loop body
+once, but scan-over-layers executes it ``L`` times.  We recover trip counts
+from the loop *condition* computations (scan bounds lower to a
+``constant(L)`` compared against the induction variable) and propagate
+multipliers through the call graph.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+               "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_computations(text: str) -> dict:
+    """Split HLO text into {computation_name: [lines]}."""
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|=)", line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps.setdefault(cur, []).append(line)
+    return comps
+
+
+def _entry_name(text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else next(iter(parse_computations(text)), "")
+
+
+def computation_multipliers(text: str) -> dict:
+    """Trip-count multiplier per computation (ENTRY = 1; while bodies get
+    their loop bound; nested loops multiply)."""
+    comps = parse_computations(text)
+    entry = _entry_name(text)
+
+    # trip count heuristic: max integer constant in the loop condition
+    def trip_of(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                best = max(best, int(c))
+        return min(best, 1_000_000)
+
+    # call edges: while(cond=..., body=...), call/fusion to_apply etc.
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        m = mult[name]
+        for line in comps.get(name, []):
+            wm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", line)
+            if wm:
+                cond, body = wm.groups()
+                trips = trip_of(cond)
+                for callee, factor in ((body, trips), (cond, trips)):
+                    mult[callee] = max(mult[callee], m * factor)
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+            for cm in re.finditer(
+                    r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                callee = cm.group(1)
+                mult[callee] = max(mult[callee], m)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return dict(mult)
+
+
+def collective_summary(text: str) -> dict:
+    """Per-device collective traffic from the compiled module.
+
+    Returns counts and byte totals per collective kind, both *static*
+    (each op once) and *corrected* (x while trip counts), using ring-cost
+    models: AR 2(n-1)/n, AG/RS/A2A (n-1)/n-ish, CP 1x."""
+    comps = parse_computations(text)
+    mult = computation_multipliers(text)
+    out = {k: {"count": 0, "bytes_static": 0.0, "bytes_corrected": 0.0,
+               "wire_bytes_corrected": 0.0} for k in COLLECTIVES}
+
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            stripped = line.strip()
+            for kind in COLLECTIVES:
+                # match: %x = <shape> kind( ... (also kind-start/done pairs)
+                if re.search(rf"\s{kind}(?:-start)?\(", stripped):
+                    lhs = stripped.split(f" {kind}", 1)[0]
+                    size = _shape_bytes(lhs)
+                    n = _group_size(stripped, 1)
+                    if kind == "all-reduce":
+                        wire = 2.0 * size * (n - 1) / max(n, 1)
+                    elif kind == "all-gather":
+                        wire = size * (n - 1) / max(n, 1)
+                    elif kind == "reduce-scatter":
+                        wire = size * (n - 1)
+                    elif kind == "all-to-all":
+                        wire = size * (n - 1) / max(n, 1)
+                    else:
+                        wire = float(size)
+                    out[kind]["count"] += 1
+                    out[kind]["bytes_static"] += size
+                    out[kind]["bytes_corrected"] += size * m
+                    out[kind]["wire_bytes_corrected"] += wire * m
+                    break
+
+    out["total_wire_bytes_corrected"] = sum(
+        v["wire_bytes_corrected"] for k, v in out.items()
+        if isinstance(v, dict))
+    out["total_bytes_corrected"] = sum(
+        v["bytes_corrected"] for k, v in out.items() if isinstance(v, dict))
+    return out

@@ -1,0 +1,135 @@
+"""Fault-tolerant sharded checkpointing with elastic restore.
+
+Design (tensorstore-free, works on any shared filesystem):
+  * each pytree leaf -> one ``.npy`` file under ``step_<N>.tmp/``
+  * ``manifest.json`` records the tree structure, dtypes, shapes and step
+  * the tmp dir is atomically renamed to ``step_<N>/`` (a crash mid-write
+    never corrupts the latest checkpoint)
+  * ``latest()`` resolves the newest complete step
+  * restore takes an OPTIONAL mesh + spec tree: arrays are re-sharded on
+    load, so a job may restart on a different topology (elastic scaling)
+  * ``AsyncCheckpointer`` runs saves on a background thread and the
+    trainer's failure hook flushes a final emergency save
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "_".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", p)))) for p in path) or "leaf"
+        name = name.replace("/", "_").replace("'", "")
+        out.append((name, leaf))
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None):
+    """Synchronous atomic sharded save."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{i:05d}_{name[:80]}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)   # atomic publish
+    return final
+
+
+def latest(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any, *,
+            mesh=None, spec_tree=None) -> Any:
+    """Load a checkpoint into ``template``'s tree structure.
+
+    With ``mesh``+``spec_tree`` the arrays are placed with the given
+    shardings — a restart may use a different mesh than the writer
+    (elastic scaling)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    _, treedef = _flatten_with_paths(template)
+    arrays = [np.load(os.path.join(path, rec["file"]))
+              for rec in manifest["leaves"]]
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    if mesh is not None and spec_tree is not None:
+        from repro.launch import mesh as mesh_lib
+        shardings = mesh_lib.sharding_tree(mesh, spec_tree)
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest.get("extra", {})
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    """Drop all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (one in flight; newer requests
+    supersede queued ones)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             block: bool = False):
+        # snapshot to host BEFORE returning control (donation safety)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def work():
+            save(self.dir, step, host_tree, extra=extra)
+            prune(self.dir, self.keep)
+
+        with self._lock:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join()

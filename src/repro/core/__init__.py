@@ -1,0 +1,29 @@
+"""The paper's primary contribution: the Atlas hybrid far-memory data plane.
+
+Public surface:
+
+* :mod:`repro.core.layout`    — PlaneConfig + address layout constants
+* :mod:`repro.core.state`     — PlaneState pytree, ``create``
+* :mod:`repro.core.plane`     — hybrid ``access``/``update``/``evacuate``
+* :mod:`repro.core.baselines` — Fastswap/AIFM-analogue planes
+* :mod:`repro.core.sync`      — deref-count (pin) protocol, live-lock guard
+* :mod:`repro.core.offload`   — far-side computation (offload space analogue)
+* :mod:`repro.core.kvplane`   — production tiered KV cache (serve path)
+* :mod:`repro.core.expertplane` — production tiered MoE expert store
+"""
+from .layout import (FREE, LOCAL, REMOTE, PSF_PAGING, PSF_RUNTIME,
+                     PlaneConfig)
+from .state import PlaneState, PlaneStats, create
+from .plane import (access, update, evacuate, writeback_all, evict_all,
+                    peek, occupancy, paging_fraction, check_invariants)
+from .baselines import paging_access, object_access, object_reclaim
+from . import sync, offload
+
+__all__ = [
+    "FREE", "LOCAL", "REMOTE", "PSF_PAGING", "PSF_RUNTIME", "PlaneConfig",
+    "PlaneState", "PlaneStats", "create",
+    "access", "update", "evacuate", "writeback_all", "evict_all",
+    "peek", "occupancy", "paging_fraction", "check_invariants",
+    "paging_access", "object_access", "object_reclaim",
+    "sync", "offload",
+]

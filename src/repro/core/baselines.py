@@ -1,0 +1,214 @@
+"""Baseline data planes, per the paper's evaluation (§5.1 "Baselines").
+
+* ``paging_access``  — Fastswap analogue: page-granular ingress **and**
+  egress, kernel-style sequential readahead, no object machinery at all.
+  Resource-cheap (victim selection is O(frames)) but suffers I/O
+  amplification on sparse access.
+
+* ``object_access``  — AIFM analogue: object-granular ingress **and**
+  egress.  Maintains a true object-level LRU (per-object timestamps) and on
+  memory pressure scans it to evict the coldest objects individually,
+  scattering them into a remote log.  ``lru_scan_budget`` models the
+  CPU-starved regime from the paper (scan a bounded window -> evict
+  near-arbitrary objects -> thrashing).
+
+Both reuse the PlaneState/PlaneConfig machinery so the benchmarks compare
+pure policy differences.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import paths
+from . import state as st
+from .layout import FREE, LOCAL, REMOTE, PlaneConfig
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+# --------------------------------------------------------------------------
+# Fastswap analogue
+# --------------------------------------------------------------------------
+
+def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray):
+    """Page-granular plane: every miss pages in (with readahead); no CAT,
+    no PSF consultation, no object moves.  Egress is the shared page-out."""
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
+
+    def body(i, carry):
+        s, out = carry
+        o = obj_ids[i]
+        vaddr = s.obj_loc[o]
+        v = vaddr // cfg.page_objs
+        is_local = s.backing[v] == LOCAL
+        s = lax.cond(
+            is_local,
+            lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
+            lambda s: paths.page_in_with_readahead(
+                cfg, s._replace(stats=st.bump(s.stats, misses=1)), v),
+            s)
+        # page-level recency only (no card profiling — that's the point)
+        s = s._replace(clock=s.clock.at[v].set(s.step))
+        row = s.frames[s.frame_of[v], vaddr % cfg.page_objs]
+        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
+        return s, out
+
+    s, out = lax.fori_loop(0, R, body, (s, out))
+    return s, out
+
+
+# --------------------------------------------------------------------------
+# AIFM analogue
+# --------------------------------------------------------------------------
+
+def _object_out_coldest(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
+    """Evict one object chosen by the object-level LRU.
+
+    Full scan: argmin of per-object last-access among local objects — the
+    O(num_objs) cost the paper charges object planes for.  With
+    ``lru_scan_budget > 0`` only a rotating window is scanned (CPU-starved
+    regime -> near-arbitrary victims)."""
+    O = cfg.num_objs
+    vp = s.obj_loc // cfg.page_objs
+    local = (s.obj_loc >= 0) & (s.backing[jnp.clip(vp, 0, cfg.num_vpages - 1)] == LOCAL)
+    unpinned = s.pin[jnp.clip(vp, 0, cfg.num_vpages - 1)] == 0
+
+    if cfg.lru_scan_budget and cfg.lru_scan_budget < O:
+        B = cfg.lru_scan_budget
+        idx = (s.lru_hand + jnp.arange(B)) % O
+        cand_mask = local[idx] & unpinned[idx]
+        score = jnp.where(cand_mask, s.obj_last[idx], INF32)
+        o = idx[jnp.argmin(score)]
+        scanned = B
+        s = s._replace(lru_hand=(s.lru_hand + B) % O)
+        valid = jnp.any(cand_mask)
+    else:
+        score = jnp.where(local & unpinned, s.obj_last, INF32)
+        o = jnp.argmin(score).astype(jnp.int32)
+        scanned = O
+        valid = jnp.any(local & unpinned)
+
+    def evict(s):
+        va = s.obj_loc[o]
+        v, slot = va // cfg.page_objs, va % cfg.page_objs
+        row = s.frames[s.frame_of[v], slot]
+        s = _append_obj_remote(cfg, s, o, row)
+        return s._replace(stats=st.bump(s.stats, obj_outs=1))
+
+    s = s._replace(stats=st.bump(s.stats, lru_scans=scanned))
+    return lax.cond(valid, evict, lambda s: s, s)
+
+
+def _append_obj_remote(cfg: PlaneConfig, s: st.PlaneState, o, row) -> st.PlaneState:
+    """Move object ``o`` to the remote log (object-granular egress).
+
+    Objects evicted at different times land on unrelated remote pages —
+    the locality-disruption effect the paper attributes to object egress."""
+
+    def need_new(s):
+        cur = s.remote_fill_vpage
+        return jnp.logical_or(
+            cur < 0, s.alloc_count[jnp.maximum(cur, 0)] >= cfg.page_objs)
+
+    def alloc_remote_log(s):
+        cur = s.remote_fill_vpage
+        s = lax.cond(cur >= 0, lambda s: paths.unpin_page(s, cur), lambda s: s, s)
+        v = jnp.argmax(s.backing == FREE).astype(jnp.int32)
+        s = s._replace(
+            backing=s.backing.at[v].set(REMOTE),
+            alloc_count=s.alloc_count.at[v].set(0),
+            live_count=s.live_count.at[v].set(0),
+            obj_of=s.obj_of.at[v].set(-1),
+            remote_fill_vpage=v,
+        )
+        return paths.pin_page(s, v)
+
+    s = lax.cond(need_new(s), alloc_remote_log, lambda s: s, s)
+    v_new = s.remote_fill_vpage
+    slot_new = s.alloc_count[v_new]
+
+    old = s.obj_loc[o]
+    v_old, slot_old = old // cfg.page_objs, old % cfg.page_objs
+
+    s = s._replace(
+        slab=s.slab.at[v_new, slot_new].set(row),
+        obj_loc=s.obj_loc.at[o].set(v_new * cfg.page_objs + slot_new),
+        obj_of=s.obj_of.at[v_new, slot_new].set(o),
+        alloc_count=s.alloc_count.at[v_new].add(1),
+        live_count=s.live_count.at[v_new].add(1),
+    )
+    return paths._kill_old_copy(cfg, s, v_old, slot_old)
+
+
+def object_reclaim(cfg: PlaneConfig, s: st.PlaneState, target_free: int
+                   ) -> st.PlaneState:
+    """Evict coldest objects until ``target_free`` frames are free (the
+    object plane's egress loop; bounded by the live-object count)."""
+
+    def free_frames(s):
+        return jnp.sum((s.vpage_of < 0).astype(jnp.int32))
+
+    def cond(s):
+        return free_frames(s) < target_free
+
+    def body(s):
+        s0_outs = s.stats.obj_outs
+
+        def one(k, s):
+            return _object_out_coldest(cfg, s)
+
+        s = lax.fori_loop(0, cfg.object_evict_batch, one, s)
+        # no progress (everything pinned) -> bail by faking success
+        stuck = s.stats.obj_outs == s0_outs
+        return lax.cond(stuck, lambda s: s, lambda s: s, s)
+
+    # hard bound: each iteration evicts object_evict_batch objects
+    max_iter = (cfg.num_objs // max(cfg.object_evict_batch, 1)) + 2
+
+    def bounded_cond(carry):
+        s, it = carry
+        return jnp.logical_and(cond(s), it < max_iter)
+
+    def bounded_body(carry):
+        s, it = carry
+        return body(s), it + 1
+
+    s, _ = lax.while_loop(bounded_cond, bounded_body,
+                          (s, jnp.asarray(0, jnp.int32)))
+    return s
+
+
+def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  reclaim_free_target: int = 2):
+    """Object-granular plane (AIFM analogue): every miss object-fetches;
+    after the batch, reclaim via the object-level LRU if frames are tight."""
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
+
+    def body(i, carry):
+        s, out = carry
+        o = obj_ids[i]
+        v = s.obj_loc[o] // cfg.page_objs
+        is_local = s.backing[v] == LOCAL
+        s = lax.cond(
+            is_local,
+            lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
+            lambda s: paths.object_in(
+                cfg, s._replace(stats=st.bump(s.stats, misses=1)), o),
+            s)
+        va2 = s.obj_loc[o]
+        v2, slot2 = va2 // cfg.page_objs, va2 % cfg.page_objs
+        # object-level hotness tracking (the expensive always-on metadata)
+        s = s._replace(obj_last=s.obj_last.at[o].set(s.step),
+                       clock=s.clock.at[v2].set(s.step))
+        row = s.frames[s.frame_of[v2], slot2]
+        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
+        return s, out
+
+    s, out = lax.fori_loop(0, R, body, (s, out))
+    s = object_reclaim(cfg, s, reclaim_free_target)
+    return s, out

@@ -1,0 +1,166 @@
+"""Production tiered MoE expert store (kimi-k2 / mixtral decode).
+
+Expert weights are far-memory-shaped state at decode time: a 384-expert
+layer activates at most ``batch * topk`` experts per step, routing is
+skewed, and the hot set churns — the paper's MCD-CL access pattern, with
+experts as the unit of transfer.
+
+Granularity note (DESIGN.md §Arch-applicability): an expert's FFN needs
+*all* of its weights at once, so the object(card) granularity collapses to
+the page granularity — each expert is one page.  The plane therefore runs
+in pure-paging mode here (bulk expert DMA in, page-granular LRU eviction,
+pinning of in-flight experts); the hybrid object path lives in the KV
+plane where sub-page access is real.
+
+The MoE math is computed directly against the *hot store*, indexed through
+the expert->slot table (the smart-pointer indirection): compute cost scales
+with the hot-set size, not the expert count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlaneConfig:
+    n_experts: int          # E
+    d_model: int
+    d_ff: int
+    hot_slots: int          # S: experts resident in HBM
+    topk: int
+    fetch_budget: int = 8   # experts fetched per step
+    capacity: int = 0       # tokens per slot buffer (0 -> derive)
+    dtype: object = jnp.bfloat16
+
+
+class ExpertPlaneState(NamedTuple):
+    # (the canonical far-tier expert weights stay in ``params`` — they are
+    # passed to ensure_resident/moe_decode, not duplicated here)
+    hot_wi: jnp.ndarray     # [S, d, f]
+    hot_wg: jnp.ndarray     # [S, d, f]
+    hot_wo: jnp.ndarray     # [S, f, d]
+    slot_of: jnp.ndarray    # [E] int32 (-1 far)
+    expert_of: jnp.ndarray  # [S] int32 (-1 free)
+    clock: jnp.ndarray      # [S] int32
+    access: jnp.ndarray     # [E] int32 activation counters (profiling)
+    step: jnp.ndarray
+
+
+def init(cfg: ExpertPlaneConfig) -> ExpertPlaneState:
+    S, d, f = cfg.hot_slots, cfg.d_model, cfg.d_ff
+    return ExpertPlaneState(
+        hot_wi=jnp.zeros((S, d, f), cfg.dtype),
+        hot_wg=jnp.zeros((S, d, f), cfg.dtype),
+        hot_wo=jnp.zeros((S, f, d), cfg.dtype),
+        slot_of=jnp.full((cfg.n_experts,), -1, jnp.int32),
+        expert_of=jnp.full((S,), -1, jnp.int32),
+        clock=jnp.zeros((S,), jnp.int32),
+        access=jnp.zeros((cfg.n_experts,), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def ensure_resident(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
+                    needed_mask: jnp.ndarray, slab_wi, slab_wg, slab_wo
+                    ) -> ExpertPlaneState:
+    """Fetch up to ``fetch_budget`` missing needed experts.  Victim slots:
+    coldest experts not needed this step (needed ones are pinned)."""
+    E, S = cfg.n_experts, cfg.hot_slots
+    missing = jnp.logical_and(needed_mask, s.slot_of < 0)
+    _, fetch_ids = lax.top_k(missing.astype(jnp.int32), cfg.fetch_budget)
+    fetch_valid = missing[fetch_ids]
+
+    hosted_needed = jnp.where(s.expert_of >= 0,
+                              needed_mask[jnp.maximum(s.expert_of, 0)], False)
+    score = jnp.where(hosted_needed, jnp.iinfo(jnp.int32).max, s.clock)
+    _, victims = lax.top_k(-score, cfg.fetch_budget)
+
+    def fetch_one(i, s):
+        e, slot, ok = fetch_ids[i], victims[i], fetch_valid[i]
+
+        def do(s):
+            old = s.expert_of[slot]
+            s = lax.cond(
+                old >= 0,
+                lambda s: s._replace(slot_of=s.slot_of.at[old].set(-1)),
+                lambda s: s, s)
+            wi = lax.dynamic_index_in_dim(slab_wi, e, 0, keepdims=False
+                                          ).astype(cfg.dtype)
+            wg = lax.dynamic_index_in_dim(slab_wg, e, 0, keepdims=False
+                                          ).astype(cfg.dtype)
+            wo = lax.dynamic_index_in_dim(slab_wo, e, 0, keepdims=False
+                                          ).astype(cfg.dtype)
+            return s._replace(
+                hot_wi=lax.dynamic_update_index_in_dim(s.hot_wi, wi, slot, 0),
+                hot_wg=lax.dynamic_update_index_in_dim(s.hot_wg, wg, slot, 0),
+                hot_wo=lax.dynamic_update_index_in_dim(s.hot_wo, wo, slot, 0),
+                slot_of=s.slot_of.at[e].set(slot),
+                expert_of=s.expert_of.at[slot].set(e),
+                clock=s.clock.at[slot].set(s.step))
+
+        return lax.cond(ok, do, lambda s: s, s)
+
+    return lax.fori_loop(0, cfg.fetch_budget, fetch_one, s)
+
+
+def moe_decode(cfg: ExpertPlaneConfig, s: ExpertPlaneState, router,
+               x: jnp.ndarray, slab_wi, slab_wg, slab_wo):
+    """x: [T, d] decode-token activations; router: [d, E].
+    Returns (y [T, d], state).  Tokens whose expert could not be made
+    resident within the fetch budget are dropped for that expert (their
+    gate weight is re-normalized away) — the bounded-staleness analogue of
+    capacity dropping."""
+    T, d = x.shape
+    E, S, K = cfg.n_experts, cfg.hot_slots, cfg.topk
+    C = cfg.capacity or max(8, -(-T * K * 2 // S))
+    s = s._replace(step=s.step + 1)
+
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = lax.top_k(probs, K)                    # [T, K]
+
+    needed = jnp.zeros((E,), bool).at[expert.reshape(-1)].set(True)
+    s = ensure_resident(cfg, s, needed, slab_wi, slab_wg, slab_wo)
+    s = s._replace(access=s.access + needed.astype(jnp.int32),
+                   clock=jnp.where(
+                       jnp.where(s.expert_of >= 0,
+                                 needed[jnp.maximum(s.expert_of, 0)], False),
+                       s.step, s.clock))
+
+    # dispatch by SLOT (smart-pointer indirection into the hot store)
+    flat_e = expert.reshape(-1)
+    slot = s.slot_of[flat_e]                              # [T*K] (-1 dropped)
+    sort_idx = jnp.argsort(jnp.where(slot >= 0, slot, S))
+    sorted_slot = jnp.where(slot[sort_idx] >= 0, slot[sort_idx], S)
+    pos = jnp.arange(T * K, dtype=jnp.int32)
+    seg_start = jnp.full((S + 1,), T * K, jnp.int32).at[sorted_slot].min(pos)
+    rank_sorted = pos - seg_start[sorted_slot]
+    rank = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(rank_sorted)
+    keep = jnp.logical_and(slot >= 0, rank < C)
+    dst = jnp.where(keep, slot * C + rank, S * C)
+
+    xe = jnp.zeros((S * C + 1, d), cfg.dtype)
+    src_tok = jnp.repeat(jnp.arange(T), K)
+    xe = xe.at[dst].set(x[src_tok].astype(cfg.dtype))
+    xe = xe[:-1].reshape(S, C, d)
+
+    g = jnp.einsum("scd,sdf->scf", xe, s.hot_wg,
+                   preferred_element_type=jnp.float32)
+    i = jnp.einsum("scd,sdf->scf", xe, s.hot_wi,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * i).astype(cfg.dtype)
+    ye = jnp.einsum("scf,sfd->scd", h, s.hot_wo,
+                    preferred_element_type=jnp.float32).astype(cfg.dtype)
+    ye = jnp.concatenate([ye.reshape(S * C, d),
+                          jnp.zeros((1, d), cfg.dtype)], axis=0)
+
+    yt = ye[dst].reshape(T, K, d).astype(jnp.float32)
+    w = jnp.where(keep.reshape(T, K), gate, 0.0)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    y = jnp.einsum("tkd,tk->td", yt, w)
+    return y.astype(x.dtype), s

@@ -1,0 +1,508 @@
+"""Production tiered KV cache on the Atlas plane (the serve-path fast path).
+
+Two modes, matching the two ends of the paper's spectrum:
+
+* **dense paging mode** (decode_32k): the whole cache fits local; KV lives
+  in a paged frame pool indirected by a page table (vLLM-style).  Dense
+  decode attention touches every token -> every card bit sets -> CAR = 1 ->
+  all pages stay on the paging path.  The always-on CAT profiling still
+  runs (its cost is part of what we benchmark).
+
+* **sparse hybrid mode** (long_500k): frames hold only a hot subset of
+  pages; the rest live in the far tier (slab).  Each step:
+    1. page summaries (kmax/kmin) are scored against q *without fetching*
+       (offload-space computation, `kernels.topk_pages`);
+    2. the top-k pages are ensured local with a *static fetch budget*:
+       PSF=paging pages arrive whole (bulk DMA), PSF=runtime pages arrive
+       as a row-gather of their CAT-marked hot rows only;
+    3. paged flash attention runs over the local pool;
+    4. CAT bits are set for the attended rows, eviction victims are chosen
+       page-granularly by clock, and their PSF is recomputed from CAR.
+
+Everything is static-shaped and vectorized: this is the form of the hybrid
+plane that lowers into the multi-pod dry-run.  The fully dynamic
+(fault-driven) plane lives in ``repro.core.plane`` and backs the
+benchmarks; both implement the same policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPlaneConfig:
+    kv_heads: int
+    head_dim: int
+    page_tokens: int          # P: tokens per page
+    num_pages: int            # NP: logical pages (covers max seq len)
+    num_frames: int           # F: local frame pool (== B*NP in dense mode)
+    batch: int                # sequences served per shard
+    sparse_topk: int = 0      # 0 = dense paging mode; >0 = hybrid sparse
+    fetch_budget: int = 8     # pages ensured local per step (sparse mode)
+    car_threshold: float = 0.8
+    dtype: object = jnp.bfloat16
+
+    @property
+    def dense(self) -> bool:
+        return self.sparse_topk == 0
+
+
+class KVPlaneState(NamedTuple):
+    """Per-layer state (callers stack a leading layer axis and scan)."""
+    k_frames: jnp.ndarray   # [KVH, F, P, Dh]
+    v_frames: jnp.ndarray   # [KVH, F, P, Dh]
+    page_table: jnp.ndarray # [B, NP] int32: logical page -> frame (-1 far)
+    # --- far tier + profiling (sparse mode; size-1 placeholders in dense)
+    k_slab: jnp.ndarray     # [KVH, B*NP, P, Dh]
+    v_slab: jnp.ndarray     # [KVH, B*NP, P, Dh]
+    kmax: jnp.ndarray       # [KVH, B*NP, Dh] page summaries (always local)
+    kmin: jnp.ndarray       # [KVH, B*NP, Dh]
+    cat: jnp.ndarray        # [B, NP, P] bool
+    psf: jnp.ndarray        # [B, NP] bool
+    hot_hint: jnp.ndarray   # [B, NP, P] bool: CAT snapshot from last residency
+    page_rows: jnp.ndarray  # [B, NP] int32: valid rows in the frame copy
+    frame_page: jnp.ndarray # [F] int32: frame -> b*NP+page (-1 free)
+    clock: jnp.ndarray      # [F] int32
+    step: jnp.ndarray       # [] int32
+
+
+def init(cfg: KVPlaneConfig) -> KVPlaneState:
+    KVH, F, P, Dh, B, NP = (cfg.kv_heads, cfg.num_frames, cfg.page_tokens,
+                            cfg.head_dim, cfg.batch, cfg.num_pages)
+    dense = cfg.dense
+    slab_pages = 1 if dense else B * NP
+    if dense:
+        # fully resident: page (b, j) -> frame b*NP + j
+        pt = (jnp.arange(B)[:, None] * NP + jnp.arange(NP)[None, :]).astype(
+            jnp.int32)
+        frame_page = jnp.arange(B * NP, dtype=jnp.int32)
+        assert F == B * NP, "dense mode: frames must cover the cache"
+    else:
+        pt = jnp.full((B, NP), -1, jnp.int32)
+        frame_page = jnp.full((F,), -1, jnp.int32)
+    return KVPlaneState(
+        k_frames=jnp.zeros((KVH, F, P, Dh), cfg.dtype),
+        v_frames=jnp.zeros((KVH, F, P, Dh), cfg.dtype),
+        page_table=pt,
+        k_slab=jnp.zeros((KVH, slab_pages, P, Dh), cfg.dtype),
+        v_slab=jnp.zeros((KVH, slab_pages, P, Dh), cfg.dtype),
+        kmax=jnp.full((KVH, slab_pages, Dh), -jnp.inf, jnp.float32),
+        kmin=jnp.full((KVH, slab_pages, Dh), jnp.inf, jnp.float32),
+        cat=jnp.zeros((B, NP, P), bool),
+        psf=jnp.ones((B, NP), bool),
+        hot_hint=jnp.zeros((B, NP, P), bool),
+        page_rows=jnp.zeros((B, NP), jnp.int32),
+        frame_page=frame_page,
+        clock=jnp.zeros((F,), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# dense paging mode
+# --------------------------------------------------------------------------
+
+def append_dense(cfg: KVPlaneConfig, s: KVPlaneState, k_new, v_new, lengths):
+    """Write one new token per sequence.  k/v_new: [B, KVH, Dh];
+    lengths: [B] current lengths (token goes at index lengths[b])."""
+    B, P = cfg.batch, cfg.page_tokens
+    page = lengths // P
+    slot = lengths % P
+    frame = s.page_table[jnp.arange(B), page]            # [B]
+    kf = s.k_frames.at[:, frame, slot].set(
+        k_new.transpose(1, 0, 2).astype(cfg.dtype))
+    vf = s.v_frames.at[:, frame, slot].set(
+        v_new.transpose(1, 0, 2).astype(cfg.dtype))
+    return s._replace(k_frames=kf, v_frames=vf, step=s.step + 1)
+
+
+def attend_dense(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths):
+    """q: [B, H, Dh] -> [B, H, Dh] via paged attention over the frame pool.
+    Also runs the always-on CAT profiling (dense touch -> CAR -> 1)."""
+    P, NP = cfg.page_tokens, cfg.num_pages
+    page_lens = ops.lengths_to_page_lens(lengths, NP, P)
+    out, _used = ops.paged_attention(q, s.k_frames, s.v_frames, s.page_table,
+                                     page_lens)
+    # profiling: dense attention reads every position below length — the
+    # program touched every card (CAR -> 1, pages stay on the paging path)
+    pos = (jnp.arange(NP * P)).reshape(NP, P)
+    touched = pos[None] < lengths[:, None, None]          # [B, NP, P]
+    s = s._replace(cat=jnp.logical_or(s.cat, touched),
+                   page_rows=page_lens,
+                   clock=jnp.full_like(s.clock, s.step))
+    return out, s
+
+
+# --------------------------------------------------------------------------
+# sparse hybrid mode (the Atlas showcase)
+# --------------------------------------------------------------------------
+
+def write_page_to_slab(cfg: KVPlaneConfig, s: KVPlaneState, b: int,
+                       page_idx, k_page, v_page):
+    """Prefill helper: place a full page [KVH, P, Dh] in the far tier and
+    update its summaries."""
+    gp = b * cfg.num_pages + page_idx
+    ks = lax.dynamic_update_index_in_dim(s.k_slab, k_page, gp, axis=1)
+    vs = lax.dynamic_update_index_in_dim(s.v_slab, v_page, gp, axis=1)
+    kmax = s.kmax.at[:, gp].set(k_page.max(axis=1).astype(jnp.float32))
+    kmin = s.kmin.at[:, gp].set(k_page.min(axis=1).astype(jnp.float32))
+    return s._replace(k_slab=ks, v_slab=vs, kmax=kmax, kmin=kmin)
+
+
+def _evict_and_fetch(cfg: KVPlaneConfig, s: KVPlaneState, b,
+                     want_pages: jnp.ndarray, page_fill: jnp.ndarray):
+    """Ensure up to ``fetch_budget`` of ``want_pages`` (logical ids for
+    sequence ``b``) are local.  Vectorized: victims = coldest unpinned
+    frames; fetched via paging (whole page) or runtime (CAT-marked rows)
+    per the page's PSF.  ``page_fill`` [NP]: appended tokens per page
+    (bounds the valid rows of paging fetches).  Returns updated state."""
+    P, NP, F, KVH, Dh = (cfg.page_tokens, cfg.num_pages, cfg.num_frames,
+                         cfg.kv_heads, cfg.head_dim)
+    K = want_pages.shape[0]
+
+    resident = s.page_table[b, want_pages] >= 0
+    missing = jnp.logical_and(~resident, want_pages >= 0)
+    # take the first `fetch_budget` missing pages (stable order by score rank)
+    order = jnp.argsort(~missing)                # missing first
+    fetch = jnp.where(jnp.arange(K) < cfg.fetch_budget,
+                      want_pages[order], -1)[:cfg.fetch_budget]
+    fetch = jnp.where(missing[order][:cfg.fetch_budget], fetch, -1)
+
+    # victims: coldest frames, excluding wanted-resident pages (pin analogue)
+    want_frames = jnp.where(resident, s.page_table[b, want_pages], -1)
+    pinned = jnp.zeros((F,), bool).at[jnp.maximum(want_frames, 0)].set(
+        want_frames >= 0)
+    score = jnp.where(pinned, jnp.iinfo(jnp.int32).max, s.clock)
+    _, victims = lax.top_k(-score, cfg.fetch_budget)     # [budget]
+
+    def fetch_one(i, s):
+        pg = fetch[i]
+        f = victims[i]
+
+        def do(s):
+            # ---- page-out the victim (egress is always page-granular) ----
+            old_gp = s.frame_page[f]
+            old_b, old_pg = old_gp // NP, old_gp % NP
+
+            def evict(s):
+                # KV pages are append-only and appends write through to the
+                # slab, so frames are never dirty: page-out is metadata-only
+                # (no writeback — and packed runtime frames must not
+                # overwrite the canonical slab layout).
+                # PSF recomputed from CAR at page-out (the Atlas policy).
+                # Denominator is the FULL page: CAR asks "would fetching the
+                # whole page have been worth it?"  A packed runtime page has
+                # at most n_hot marked cards -> CAR = n_hot/P stays below
+                # threshold -> the page keeps taking the runtime path.
+                cat_now = s.cat[old_b, old_pg]
+                car = jnp.mean(cat_now.astype(jnp.float32))
+                # snapshot the hot set for the next runtime fetch.  For a
+                # packed page, card bits refer to packed slots: map them
+                # back through the previous hint (packed slot i == i-th set
+                # bit of the old hint, by stable sort).
+                old_hint = s.hot_hint[old_b, old_pg]
+                rank = jnp.cumsum(old_hint.astype(jnp.int32)) - 1
+                packed_back = jnp.logical_and(
+                    old_hint, cat_now[jnp.clip(rank, 0, P - 1)])
+                was_full = s.page_rows[old_b, old_pg] >= P
+                hint = jnp.where(was_full, cat_now, packed_back)
+                return s._replace(
+                    psf=s.psf.at[old_b, old_pg].set(car >= cfg.car_threshold),
+                    hot_hint=s.hot_hint.at[old_b, old_pg].set(hint),
+                    cat=s.cat.at[old_b, old_pg].set(False),
+                    page_rows=s.page_rows.at[old_b, old_pg].set(0),
+                    page_table=s.page_table.at[old_b, old_pg].set(-1))
+
+            s = lax.cond(old_gp >= 0, evict, lambda s: s, s)
+
+            # ---- ingress per PSF --------------------------------------
+            gp = b * NP + pg
+            kpage = lax.dynamic_index_in_dim(s.k_slab, gp, 1, keepdims=False)
+            vpage = lax.dynamic_index_in_dim(s.v_slab, gp, 1, keepdims=False)
+            hot = s.hot_hint[b, pg]                      # [P] runtime-path rows
+            n_hot = jnp.sum(hot.astype(jnp.int32))
+            # first-touch / append pages always take paging; else the PSF
+            take_paging = jnp.logical_or(s.psf[b, pg], n_hot == 0)
+            # runtime path: pack only the CAT-marked rows to the front of
+            # the frame (object fetching moves hot objects into contiguous
+            # local space — decode attention is KV-permutation-invariant)
+            perm = jnp.argsort(~hot)                     # hot rows first
+            kpk = jnp.take(kpage, perm, axis=1)
+            vpk = jnp.take(vpage, perm, axis=1)
+            kpage = jnp.where(take_paging, kpage, kpk)
+            vpage = jnp.where(take_paging, vpage, vpk)
+            rows = jnp.where(take_paging, page_fill[pg], n_hot).astype(jnp.int32)
+            kf = lax.dynamic_update_index_in_dim(s.k_frames, kpage, f, 1)
+            vf = lax.dynamic_update_index_in_dim(s.v_frames, vpage, f, 1)
+            return s._replace(
+                k_frames=kf, v_frames=vf,
+                page_table=s.page_table.at[b, pg].set(f),
+                page_rows=s.page_rows.at[b, pg].set(rows),
+                frame_page=s.frame_page.at[f].set(gp),
+                # CAT cleared at page-in ("accessed since last swapped in");
+                # the profiling step marks attended rows afterwards
+                cat=s.cat.at[b, pg].set(False),
+                clock=s.clock.at[f].set(s.step))
+
+        return lax.cond(pg >= 0, do, lambda s: s, s)
+
+    return lax.fori_loop(0, cfg.fetch_budget, fetch_one, s)
+
+
+def attend_sparse(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths):
+    """Hybrid sparse decode.  q: [B, H, Dh] (B = 1 per shard in long_500k).
+
+    Returns (out [B, H, Dh], state)."""
+    B, P, NP = cfg.batch, cfg.page_tokens, cfg.num_pages
+    K = cfg.sparse_topk
+    s = s._replace(step=s.step + 1)
+
+    # 1. offload-space scoring against far-resident summaries
+    scores = ops.page_scores(q, s.kmax.reshape(cfg.kv_heads, -1, cfg.head_dim),
+                             s.kmin.reshape(cfg.kv_heads, -1, cfg.head_dim))
+    # scores: [B, KVH, B*NP] -> per-sequence slice, reduce over kv heads
+    per_page = scores.max(axis=1)                        # [B, B*NP]
+
+    def seq_sel(b):
+        sl = lax.dynamic_slice_in_dim(per_page[b], b * NP, NP)
+        npages = jnp.maximum((lengths[b] + P - 1) // P, 1)
+        valid = jnp.arange(NP) < npages
+        sl = jnp.where(valid, sl, -jnp.inf)
+        _, top = lax.top_k(sl, K)
+        top = jnp.where(jnp.arange(K) < jnp.minimum(npages, K), top, -1)
+        # always include the newest page (it is being appended)
+        newest = npages - 1
+        present = jnp.any(top == newest)
+        top = top.at[K - 1].set(jnp.where(present, top[K - 1], newest))
+        return top
+
+    tops = jax.vmap(seq_sel)(jnp.arange(B))              # [B, K]
+
+    # 2. ensure-local with static fetch budget (ingress via PSF)
+    fills = ops.lengths_to_page_lens(lengths, NP, P)      # [B, NP]
+
+    def per_seq(b, s):
+        return _evict_and_fetch(cfg, s, b, tops[b], fills[b])
+    s = lax.fori_loop(0, B, per_seq, s)
+
+    # 3. attention over the selected local pages only (columns = selection;
+    #    per-column row counts come from page_rows — packed pages included)
+    bidx = jnp.arange(B)[:, None]
+    sel_frames = s.page_table[bidx, tops]                # [B, K] (-1 if miss)
+    sel_valid = sel_frames >= 0
+    sel_rows = jnp.where(sel_valid, s.page_rows[bidx, tops], 0)
+    out, used = ops.paged_attention(
+        q, s.k_frames, s.v_frames,
+        jnp.where(sel_valid, sel_frames, -1), sel_rows)
+
+    # 4. always-on profiling: mark the cards of rows whose attention weight
+    #    was above the within-page mean (``used`` from the attention kernel)
+    #    — flat pages mark everything -> CAR high -> paging; skewed pages
+    #    mark the few heavy rows -> CAR low -> runtime
+    touched_pages = jnp.where(sel_valid, tops, 0)
+    cat = s.cat.at[bidx, touched_pages].set(
+        jnp.where(sel_valid[..., None],
+                  jnp.logical_or(s.cat[bidx, touched_pages], used),
+                  s.cat[bidx, touched_pages]))
+    clock = s.clock.at[jnp.maximum(sel_frames, 0).reshape(-1)].set(
+        jnp.where(sel_valid.reshape(-1), s.step,
+                  s.clock[jnp.maximum(sel_frames, 0).reshape(-1)]))
+    return out, s._replace(cat=cat, clock=clock)
+
+
+# --------------------------------------------------------------------------
+# window (ring-buffer) mode: sliding-window attention at long context
+# --------------------------------------------------------------------------
+
+def append_window(cfg: KVPlaneConfig, s: KVPlaneState, k_new, v_new, lengths):
+    """Ring-buffer append for SWA (mixtral long_500k): the cache covers only
+    the window; new tokens overwrite the oldest slot."""
+    W = cfg.num_pages * cfg.page_tokens
+    return append_dense(cfg, s, k_new, v_new, lengths % W)
+
+
+def attend_window(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths):
+    """Attention over the ring buffer: every resident slot is inside the
+    window by construction (older tokens were overwritten)."""
+    W = cfg.num_pages * cfg.page_tokens
+    return attend_dense(cfg, s, q, jnp.minimum(lengths, W))
+
+
+# --------------------------------------------------------------------------
+# sharded sparse decode: plane shards own disjoint page ranges; partial
+# attention per shard, log-sum-exp combine across shards (flash-decoding)
+# --------------------------------------------------------------------------
+
+def _attend_pages_partial(q, k_frames, v_frames, table, rows):
+    """Unnormalized attention over selected local pages.
+
+    q [B, H, Dh]; k/v_frames [KVH, F, P, Dh]; table/rows [B, K].
+    Returns (acc [B, H, Dh] f32, m [B, H, 1], l [B, H, 1],
+             used [B, K, P] bool)."""
+    B, H, Dh = q.shape
+    KVH, F, P, _ = k_frames.shape
+    K = table.shape[1]
+    G = H // KVH
+
+    def per_seq(qb, pt, pr):
+        safe = jnp.maximum(pt, 0)
+        k = k_frames[:, safe].reshape(KVH, K * P, Dh)
+        v = v_frames[:, safe].reshape(KVH, K * P, Dh)
+        qg = qb.reshape(KVH, G, Dh).astype(jnp.float32)
+        sc = jnp.einsum("kgd,ksd->kgs", qg, k.astype(jnp.float32))
+        sc *= 1.0 / jnp.sqrt(jnp.float32(Dh))
+        row = jnp.tile(jnp.arange(P), K)
+        valid = (row < jnp.repeat(pr, P)) & jnp.repeat(pt >= 0, P)
+        sc = jnp.where(valid[None, None, :], sc, NEG_INF)
+        m = sc.max(-1, keepdims=True)                    # [KVH, G, 1]
+        p = jnp.exp(sc - m)
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        l = p.sum(-1, keepdims=True)
+        acc = jnp.einsum("kgs,ksd->kgd", p, v.astype(jnp.float32))
+        # card signal: weight above within-page mean
+        pp = p.reshape(KVH, G, K, P)
+        mass = pp.sum(-1, keepdims=True)
+        used = (pp * P > mass).any(axis=(0, 1)) & valid.reshape(K, P)
+        return (acc.reshape(H, Dh), m.reshape(H, 1), l.reshape(H, 1), used)
+
+    return jax.vmap(per_seq)(q, table, rows)
+
+
+def attend_sparse_partial(cfg: KVPlaneConfig, s: KVPlaneState, q,
+                          first_token, global_len, newest_page):
+    """One shard's contribution to sharded sparse decode.
+
+    ``first_token``: absolute position of this shard's first page;
+    ``global_len``: sequence length; ``newest_page``: local index of the
+    append page (-1 if another shard owns it).  Returns (acc, m, l, s)."""
+    B, P, NP = cfg.batch, cfg.page_tokens, cfg.num_pages
+    K = cfg.sparse_topk
+    s = s._replace(step=s.step + 1)
+    page_fill = jnp.clip(global_len - first_token - jnp.arange(NP) * P, 0, P
+                         ).astype(jnp.int32)
+    n_valid_pages = jnp.sum((page_fill > 0).astype(jnp.int32))
+
+    scores = ops.page_scores(q, s.kmax.reshape(cfg.kv_heads, -1, cfg.head_dim),
+                             s.kmin.reshape(cfg.kv_heads, -1, cfg.head_dim))
+    per_page = scores.max(axis=1)                        # [B, B*NP]
+
+    def seq_sel(b):
+        sl = lax.dynamic_slice_in_dim(per_page[b], b * NP, NP)
+        valid = jnp.arange(NP) < n_valid_pages
+        sl = jnp.where(valid, sl, -jnp.inf)
+        _, top = lax.top_k(sl, K)
+        top = jnp.where(jnp.arange(K) < jnp.minimum(n_valid_pages, K),
+                        top, -1)
+        # the append page must stay selected on its owner shard; if the
+        # scorer didn't pick it, it replaces the lowest-score selection
+        present = jnp.logical_or(jnp.any(top == newest_page),
+                                 newest_page < 0)
+        top = top.at[K - 1].set(jnp.where(present, top[K - 1], newest_page))
+        return top
+
+    tops = jax.vmap(seq_sel)(jnp.arange(B))              # [B, K]
+
+    def per_seq(b, s):
+        return _evict_and_fetch(cfg, s, b, tops[b], page_fill)
+    s = lax.fori_loop(0, B, per_seq, s)
+
+    bidx = jnp.arange(B)[:, None]
+    safe_tops = jnp.maximum(tops, 0)
+    sel_frames = jnp.where(tops >= 0, s.page_table[bidx, safe_tops], -1)
+    sel_valid = sel_frames >= 0
+    sel_rows = jnp.where(sel_valid, s.page_rows[bidx, safe_tops], 0)
+    acc, m, l, used = _attend_pages_partial(
+        q, s.k_frames, s.v_frames,
+        jnp.where(sel_valid, sel_frames, -1), sel_rows)
+
+    touched = jnp.where(sel_valid, tops, 0)
+    cat = s.cat.at[bidx, touched].set(
+        jnp.where(sel_valid[..., None],
+                  jnp.logical_or(s.cat[bidx, touched], used),
+                  s.cat[bidx, touched]))
+    clock = s.clock.at[jnp.maximum(sel_frames, 0).reshape(-1)].set(
+        jnp.where(sel_valid.reshape(-1), s.step,
+                  s.clock[jnp.maximum(sel_frames, 0).reshape(-1)]))
+    return acc, m, l, s._replace(cat=cat, clock=clock)
+
+
+def sharded_sparse_decode(cfg: KVPlaneConfig, states, q, lengths):
+    """Vmapped-over-shards sparse decode with flash-decoding combine.
+
+    ``states``: KVPlaneState with a leading shard axis [D, ...] (sharded
+    over the data axis under pjit); q [B, H, Dh] replicated; lengths [B].
+    Returns (out [B, H, Dh], states)."""
+    D = states.step.shape[0]
+    B, P, NP = cfg.batch, cfg.page_tokens, cfg.num_pages
+    npages_global = (lengths[0] + P - 1) // P            # B=1 per long run
+    shard_ids = jnp.arange(D)
+    first_tokens = shard_ids * NP * P
+    newest_global = jnp.maximum(npages_global - 1, 0)
+    newest_local = jnp.where(newest_global // NP == shard_ids,
+                             newest_global % NP, -1).astype(jnp.int32)
+
+    acc, m, l, states = jax.vmap(
+        lambda st, ft, nl: attend_sparse_partial(cfg, st, q, ft, lengths[0], nl)
+    )(states, first_tokens, newest_local)
+    # combine: [D, B, H, *]
+    m_star = m.max(axis=0, keepdims=True)
+    w = jnp.exp(m - m_star)
+    l_tot = (l * w).sum(axis=0)
+    acc_tot = (acc * w).sum(axis=0)
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)
+    return out.astype(q.dtype), states
+
+
+def append_sharded(cfg: KVPlaneConfig, states, k_new, v_new, lengths):
+    """Append one token's KV (B=1) into the owning shard's slab page (+ the
+    frame copy if resident) and refresh that page's summaries."""
+    D = states.step.shape[0]
+    P, NP = cfg.page_tokens, cfg.num_pages
+    t = lengths[0]
+    gpage = t // P
+    slot = t % P
+    shard_ids = jnp.arange(D)
+    own = gpage // NP == shard_ids
+    lpage = (gpage % NP).astype(jnp.int32)
+
+    def per_shard(st, is_owner):
+        kn = k_new[0].astype(cfg.dtype)                  # [KVH, Dh]
+        vn = v_new[0].astype(cfg.dtype)
+        gp = 0 * NP + lpage                              # b = 0
+        ks = st.k_slab.at[:, gp, slot].set(
+            jnp.where(is_owner, kn, st.k_slab[:, gp, slot]))
+        vs = st.v_slab.at[:, gp, slot].set(
+            jnp.where(is_owner, vn, st.v_slab[:, gp, slot]))
+        kmax = st.kmax.at[:, gp].set(
+            jnp.where(is_owner,
+                      jnp.maximum(st.kmax[:, gp], kn.astype(jnp.float32)),
+                      st.kmax[:, gp]))
+        kmin = st.kmin.at[:, gp].set(
+            jnp.where(is_owner,
+                      jnp.minimum(st.kmin[:, gp], kn.astype(jnp.float32)),
+                      st.kmin[:, gp]))
+        # write-through to the frame copy if the page is resident
+        f = st.page_table[0, lpage]
+        safe_f = jnp.maximum(f, 0)
+        do_frame = jnp.logical_and(is_owner, f >= 0)
+        kf = st.k_frames.at[:, safe_f, slot].set(
+            jnp.where(do_frame, kn, st.k_frames[:, safe_f, slot]))
+        vf = st.v_frames.at[:, safe_f, slot].set(
+            jnp.where(do_frame, vn, st.v_frames[:, safe_f, slot]))
+        rows = st.page_rows.at[0, lpage].set(
+            jnp.where(do_frame, jnp.maximum(st.page_rows[0, lpage], slot + 1),
+                      st.page_rows[0, lpage]))
+        return st._replace(k_slab=ks, v_slab=vs, kmax=kmax, kmin=kmin,
+                           k_frames=kf, v_frames=vf, page_rows=rows)
+
+    return jax.vmap(per_shard)(states, own)

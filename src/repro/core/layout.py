@@ -1,0 +1,81 @@
+"""Address layout for the Atlas hybrid data plane.
+
+The plane manages a *log-structured virtual page space*.  Every object
+(a tensor row) has a stable virtual address::
+
+    vaddr = vpage * page_objs + slot
+
+recorded in the smart-pointer table ``obj_loc``.  A virtual page is backed
+either by a local **frame** (the HBM tier) or by its dedicated **slab slot**
+(the far tier; slab slot id == vpage id, so slab allocation is implicit).
+
+Paper mapping (Atlas, §4):
+  * page            -> vpage / frame of ``page_objs`` rows
+  * card (16 B)     -> one object slot (cards are per-object here; see DESIGN.md)
+  * smart pointer   -> ``obj_loc`` indirection entry
+  * paging path     -> rebind vpage backing slab<->frame, vaddrs unchanged
+  * runtime path    -> move object rows to fill pages, rewriting ``obj_loc``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+# Backing kinds for a virtual page.
+FREE = 0     # unallocated vpage (available to the log allocator)
+LOCAL = 1    # backed by a frame (local / HBM tier)
+REMOTE = 2   # backed by its slab slot (far tier)
+
+# PSF values (1-bit path selector flag per vpage).
+PSF_RUNTIME = False  # object-fetch ingress
+PSF_PAGING = True    # paging ingress
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneConfig:
+    """Static configuration of a plane instance (hashable: usable as a jit
+    static argument)."""
+
+    num_objs: int              # object-id capacity O
+    obj_dim: int               # row width D (elements)
+    page_objs: int             # objects per page P
+    num_frames: int            # local frames F (the "local memory" budget)
+    num_vpages: int            # virtual pages V (>= ceil(O/P) + log headroom)
+    car_threshold: float = 0.8       # CAR >= threshold  => PSF=paging at page-out
+    evac_garbage_threshold: float = 0.5  # dead/allocated ratio triggering evacuation
+    readahead: int = 0         # paging-path readahead window (pages)
+    dtype: Any = jnp.float32
+    # Object-plane (AIFM-analogue) baseline knobs:
+    object_evict_batch: int = 8      # objects evicted per reclaim
+    lru_scan_budget: int = 0         # 0 = unlimited scan; >0 models CPU-starved LRU
+    psf_init_paging: bool = True     # pages start on the paging path (kernel default)
+
+    def __post_init__(self):
+        assert self.num_vpages * self.page_objs >= self.num_objs, (
+            "virtual page space must cover the object space")
+        assert self.num_vpages >= self.data_pages + 4, (
+            "need log headroom beyond the initial packing (fill pages)")
+        assert self.num_frames >= 4, "need frames for fill pages + working set"
+
+    @property
+    def data_pages(self) -> int:
+        """Pages used by the initial dense packing of the object space."""
+        return -(-self.num_objs // self.page_objs)
+
+    @property
+    def row_bytes(self) -> int:
+        return self.obj_dim * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_objs * self.row_bytes
+
+
+def vaddr_of(vpage, slot, page_objs: int):
+    return vpage * page_objs + slot
+
+
+def split_vaddr(vaddr, page_objs: int):
+    return vaddr // page_objs, vaddr % page_objs

@@ -1,0 +1,53 @@
+"""Computation offloading (paper §4.3 "Computation offloading").
+
+Atlas reserves an *offload space* whose pages keep address alignment between
+the compute and memory servers, so functions can run remotely on objects
+without fetching them.  The space is object-in / page-out only.
+
+TPU adaptation: the far tier (slab) is addressable by reduction kernels
+without staging rows into frames, because vaddrs are *always* stable at
+page-out in our design (slab slot id == vpage id).  "Running a function on
+the remote side" therefore becomes: execute the reduction directly against
+slab storage and return only the (small) result — exactly the traffic-saving
+the paper is after.  The flagship use is sparse-attention page scoring
+(``kernels.topk_pages``): page summaries are computed against far-resident
+KV pages, and only the winning pages are fetched.
+
+The ``offload`` bit in the smart pointer becomes a per-page ``offload_busy``
+mask the runtime must respect before object-fetching (we expose it as an
+extra pin so the existing victim/evacuation masking enforces it).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import state as st
+from .layout import REMOTE, PlaneConfig
+
+
+def remote_apply(cfg: PlaneConfig, s: st.PlaneState, vpages: jnp.ndarray,
+                 fn: Callable[[jnp.ndarray], jnp.ndarray]):
+    """Run ``fn`` on far-resident pages *without fetching them*.
+
+    ``fn`` maps ``[P, D] -> [...]`` and is vmapped over the requested pages.
+    Pages that are actually local are served from frames (free consistency:
+    there is never more than one live copy of a page).  Returns
+    ``(state, results)``; the touched pages are pinned for the duration via
+    the offload bit analogue (caller releases with :func:`remote_release`)."""
+    import jax
+
+    local = s.backing[vpages] != REMOTE
+    frames_idx = jnp.maximum(s.frame_of[vpages], 0)
+    pages = jnp.where(local[:, None, None],
+                      s.frames[frames_idx], s.slab[vpages])
+    results = jax.vmap(fn)(pages)
+    s = s._replace(pin=s.pin.at[vpages].add(1))   # offload-busy
+    return s, results
+
+
+def remote_release(cfg: PlaneConfig, s: st.PlaneState, vpages: jnp.ndarray
+                   ) -> st.PlaneState:
+    """Clear the offload-busy pins taken by :func:`remote_apply`."""
+    return s._replace(pin=s.pin.at[vpages].add(-1))

@@ -1,0 +1,259 @@
+"""The two ingress paths + the single (paging) egress path.
+
+All functions are pure and jit-compatible: indices are traced scalars,
+capacities are static.  Data movement between the far tier (``slab``) and
+the local tier (``frames``) is done with dynamic slices — on TPU this is a
+contiguous DMA per page (paging path) or a row gather (runtime path); the
+Pallas kernels in ``repro.kernels`` implement the batched production
+versions of both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import state as st
+from .layout import FREE, LOCAL, REMOTE, PlaneConfig
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+# --------------------------------------------------------------------------
+# profiling primitives (always-on, paper §4.1)
+# --------------------------------------------------------------------------
+
+def car_of(cfg: PlaneConfig, s: st.PlaneState, v) -> jnp.ndarray:
+    """Card access rate of vpage ``v``: set CAT bits / allocated cards."""
+    set_bits = jnp.sum(s.cat[v].astype(jnp.int32))
+    denom = jnp.maximum(s.alloc_count[v], 1)
+    return set_bits.astype(jnp.float32) / denom.astype(jnp.float32)
+
+
+def touch(cfg: PlaneConfig, s: st.PlaneState, v, slot, *, write=False,
+          obj_id=None) -> st.PlaneState:
+    """Record an access: CAT card bit, per-object access bit, page recency."""
+    s = s._replace(
+        cat=s.cat.at[v, slot].set(True),
+        access=s.access.at[v, slot].set(True),
+        clock=s.clock.at[v].set(s.step),
+    )
+    if write:
+        s = s._replace(dirty=s.dirty.at[v].set(True))
+    if obj_id is not None:  # object-plane LRU timestamp (baseline bookkeeping)
+        s = s._replace(obj_last=s.obj_last.at[obj_id].set(s.step))
+    return s
+
+
+def pin_page(s: st.PlaneState, v) -> st.PlaneState:
+    return s._replace(pin=s.pin.at[v].add(1))
+
+
+def unpin_page(s: st.PlaneState, v) -> st.PlaneState:
+    return s._replace(pin=s.pin.at[v].add(-1))
+
+
+# --------------------------------------------------------------------------
+# egress: page-out (the only egress path, paper §4.1 "Egress")
+# --------------------------------------------------------------------------
+
+def page_out(cfg: PlaneConfig, s: st.PlaneState, f) -> st.PlaneState:
+    """Evict frame ``f``: write back to the slab, update PSF from CAR,
+    clear the CAT.  Must only be called on an unpinned, occupied frame."""
+    v = s.vpage_of[f]
+    car = car_of(cfg, s, v)
+    new_psf = car >= cfg.car_threshold
+    old_psf = s.psf[v]
+    flip_to_p = jnp.logical_and(~old_psf, new_psf).astype(jnp.int32)
+    flip_to_r = jnp.logical_and(old_psf, ~new_psf).astype(jnp.int32)
+
+    dirty = s.dirty[v]
+    # Write back unconditionally (a clean page's copy is already identical);
+    # ``dirty_page_outs`` counts the transfers a real system would issue.
+    slab = lax.dynamic_update_index_in_dim(s.slab, s.frames[f], v, axis=0)
+
+    s = s._replace(
+        slab=slab,
+        psf=s.psf.at[v].set(new_psf),
+        cat=s.cat.at[v].set(False),
+        backing=s.backing.at[v].set(REMOTE),
+        frame_of=s.frame_of.at[v].set(-1),
+        vpage_of=s.vpage_of.at[f].set(-1),
+        dirty=s.dirty.at[v].set(False),
+        stats=st.bump(s.stats, page_outs=1,
+                      dirty_page_outs=dirty.astype(jnp.int32),
+                      psf_to_paging=flip_to_p, psf_to_runtime=flip_to_r),
+    )
+    return s
+
+
+def _victim_frame(cfg: PlaneConfig, s: st.PlaneState):
+    """Page-level clock/LRU victim among unpinned occupied frames.
+
+    Cost is O(F) — this is the paper's point: page-granular victim selection
+    scans frames, not objects (the object-plane baseline scans O objects).
+    Returns (frame, valid)."""
+    v = s.vpage_of  # [F]
+    occupied = v >= 0
+    pinned = jnp.where(occupied, s.pin[jnp.maximum(v, 0)] > 0, True)
+    score = jnp.where(occupied & ~pinned, s.clock[jnp.maximum(v, 0)], INF32)
+    f = jnp.argmin(score)
+    return f.astype(jnp.int32), score[f] < INF32
+
+
+def alloc_frame(cfg: PlaneConfig, s: st.PlaneState):
+    """Return (state, frame): a free frame, evicting a victim if needed."""
+    free = s.vpage_of < 0
+    have_free = jnp.any(free)
+    f_free = jnp.argmax(free).astype(jnp.int32)
+
+    def _evict(s):
+        f, ok = _victim_frame(cfg, s)
+        # Under memory pressure with everything pinned a real Atlas forces a
+        # PSF flip + page-out (paper §4.2 live-lock note); callers bound the
+        # number of pins per batch so ok is always true here (asserted by the
+        # property tests).
+        return page_out(cfg, s, f), f
+
+    s, f = lax.cond(have_free, lambda s: (s, f_free), _evict, s)
+    return s, f
+
+
+# --------------------------------------------------------------------------
+# ingress path 1: paging (whole-page fetch; vaddrs stable, no pointer updates)
+# --------------------------------------------------------------------------
+
+def page_in(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
+    """Fetch vpage ``v`` (REMOTE -> LOCAL) through the paging path."""
+    s, f = alloc_frame(cfg, s)
+    page = lax.dynamic_index_in_dim(s.slab, v, axis=0, keepdims=False)
+    frames = lax.dynamic_update_index_in_dim(s.frames, page, f, axis=0)
+    s = s._replace(
+        frames=frames,
+        backing=s.backing.at[v].set(LOCAL),
+        frame_of=s.frame_of.at[v].set(f),
+        vpage_of=s.vpage_of.at[f].set(v),
+        cat=s.cat.at[v].set(False),   # "accessed since ... last swapped in"
+        clock=s.clock.at[v].set(s.step),
+        stats=st.bump(s.stats, page_ins=1),
+    )
+    return s
+
+
+def page_in_with_readahead(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
+    """Paging path with a sequential readahead window (kernel prefetcher
+    analogue; window size = ``cfg.readahead``)."""
+    s = page_in(cfg, s, v)
+    if cfg.readahead <= 0:
+        return s
+
+    def body(i, s):
+        nv = v + 1 + i
+        ok = (nv < cfg.num_vpages)
+        ok = jnp.logical_and(ok, s.backing[jnp.minimum(nv, cfg.num_vpages - 1)] == REMOTE)
+        # only readahead pages that are also on the paging path
+        ok = jnp.logical_and(ok, s.psf[jnp.minimum(nv, cfg.num_vpages - 1)])
+        return lax.cond(ok, lambda s: page_in(cfg, s, nv), lambda s: s, s)
+
+    return lax.fori_loop(0, cfg.readahead, body, s)
+
+
+# --------------------------------------------------------------------------
+# ingress path 2: runtime object fetch (log-structured; rewrites obj_loc)
+# --------------------------------------------------------------------------
+
+def _fresh_vpage(cfg: PlaneConfig, s: st.PlaneState):
+    """Allocate a FREE vpage backed by a fresh frame; returns (state, vpage).
+    The new page is pinned (it is an active allocation target)."""
+    v = jnp.argmax(s.backing == FREE).astype(jnp.int32)
+    s, f = alloc_frame(cfg, s)
+    s = s._replace(
+        backing=s.backing.at[v].set(LOCAL),
+        frame_of=s.frame_of.at[v].set(f),
+        vpage_of=s.vpage_of.at[f].set(v),
+        alloc_count=s.alloc_count.at[v].set(0),
+        live_count=s.live_count.at[v].set(0),
+        cat=s.cat.at[v].set(False),
+        access=s.access.at[v].set(False),
+        obj_of=s.obj_of.at[v].set(-1),
+        dirty=s.dirty.at[v].set(True),   # log pages are born dirty
+        clock=s.clock.at[v].set(s.step),
+        psf=s.psf.at[v].set(cfg.psf_init_paging),
+    )
+    return pin_page(s, v), v
+
+
+def _ensure_fill(cfg: PlaneConfig, s: st.PlaneState, which: str):
+    """Make sure the named fill cursor points at a page with a free slot."""
+    cur = getattr(s, which)
+
+    def need_new(s):
+        full = s.alloc_count[jnp.maximum(cur, 0)] >= cfg.page_objs
+        return jnp.logical_or(cur < 0, full)
+
+    def retire_and_alloc(s):
+        # retire: unpin the old fill page (it becomes a normal page)
+        s = lax.cond(cur >= 0, lambda s: unpin_page(s, cur), lambda s: s, s)
+        s, v = _fresh_vpage(cfg, s)
+        return s._replace(**{which: v})
+
+    return lax.cond(need_new(s), retire_and_alloc, lambda s: s, s)
+
+
+def free_page(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
+    """Release vpage ``v`` (and its frame, if local) back to the allocator."""
+    def drop_frame(s):
+        fo = s.frame_of[v]
+        return s._replace(vpage_of=s.vpage_of.at[fo].set(-1),
+                          frame_of=s.frame_of.at[v].set(-1))
+
+    s = lax.cond(s.frame_of[v] >= 0, drop_frame, lambda s: s, s)
+    return s._replace(backing=s.backing.at[v].set(FREE),
+                      dirty=s.dirty.at[v].set(False))
+
+
+def _kill_old_copy(cfg: PlaneConfig, s: st.PlaneState, v_old, slot_old
+                   ) -> st.PlaneState:
+    """Mark an object's previous slot dead; GC the page if it just emptied."""
+    s = s._replace(
+        obj_of=s.obj_of.at[v_old, slot_old].set(-1),
+        live_count=s.live_count.at[v_old].add(-1),
+    )
+    dead = jnp.logical_and(s.live_count[v_old] == 0, s.pin[v_old] == 0)
+    return lax.cond(dead, lambda s: free_page(cfg, s, v_old), lambda s: s, s)
+
+
+def _append_obj(cfg: PlaneConfig, s: st.PlaneState, o, row, which: str):
+    """Append object ``o`` (data ``row``) to the named fill page; rewrites the
+    smart pointer and kills the old copy."""
+    s = _ensure_fill(cfg, s, which)
+    v_new = getattr(s, which)
+    slot_new = s.alloc_count[v_new]
+    f_new = s.frame_of[v_new]
+
+    old = s.obj_loc[o]
+    v_old, slot_old = old // cfg.page_objs, old % cfg.page_objs
+
+    frames = s.frames.at[f_new, slot_new].set(row)
+    s = s._replace(
+        frames=frames,
+        obj_loc=s.obj_loc.at[o].set(v_new * cfg.page_objs + slot_new),
+        obj_of=s.obj_of.at[v_new, slot_new].set(o),
+        alloc_count=s.alloc_count.at[v_new].add(1),
+        live_count=s.live_count.at[v_new].add(1),
+    )
+    s = _kill_old_copy(cfg, s, v_old, slot_old)
+    return s, v_new, slot_new
+
+
+def object_in(cfg: PlaneConfig, s: st.PlaneState, o) -> st.PlaneState:
+    """Fetch a single object through the runtime path: copy its row from the
+    far tier onto the ingress fill page (grouping objects accessed close in
+    time onto the same page — the locality-manufacturing step)."""
+    old = s.obj_loc[o]
+    v_old, slot_old = old // cfg.page_objs, old % cfg.page_objs
+    row = s.slab[v_old, slot_old]
+    s, v_new, slot_new = _append_obj(cfg, s, o, row, "fill_vpage")
+    s = s._replace(stats=st.bump(s.stats, obj_ins=1),
+                   cat=s.cat.at[v_new, slot_new].set(True))
+    return s

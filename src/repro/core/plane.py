@@ -1,0 +1,291 @@
+"""The Atlas hybrid data plane: batched access, evacuation, writeback.
+
+``access`` is the batched read barrier (paper Algorithm 1/2): for each
+requested object it
+
+  1. increments the deref count of the object's page (pre-scope barrier;
+     Invariant #2: pinned pages are never chosen as page-out victims),
+  2. on a miss consults the page's PSF and takes either the **paging** path
+     (whole-page fetch, vaddrs stable) or the **runtime** path (object moved
+     to the ingress fill page, smart pointer rewritten),
+  3. records the access in the CAT (card bit), the per-object access bit and
+     the page clock (always-on profiling),
+  4. after the batch, gathers all rows (now guaranteed local) and releases
+     the deref counts (post-scope barrier).
+
+Eviction happens only page-granularly inside ``alloc_frame`` (egress path,
+paper §4.1) — the PSF of the victim is recomputed from its CAR there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import paths
+from . import state as st
+from .layout import FREE, LOCAL, REMOTE, PlaneConfig
+
+
+# --------------------------------------------------------------------------
+# batched access (the hybrid ingress)
+# --------------------------------------------------------------------------
+
+def _ensure_local_one(cfg: PlaneConfig, s: st.PlaneState, o) -> st.PlaneState:
+    """Fault in object ``o`` if needed, pin its (final) page, record access."""
+    vaddr = s.obj_loc[o]
+    v = vaddr // cfg.page_objs
+    is_local = s.backing[v] == LOCAL
+
+    def miss(s):
+        s = s._replace(stats=st.bump(s.stats, misses=1))
+        return lax.cond(
+            s.psf[v],
+            lambda s: paths.page_in_with_readahead(cfg, s, v),
+            lambda s: paths.object_in(cfg, s, o),
+            s)
+
+    s = lax.cond(is_local,
+                 lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
+                 miss, s)
+
+    # the object may have moved (runtime path): re-read the smart pointer
+    vaddr2 = s.obj_loc[o]
+    v2, slot2 = vaddr2 // cfg.page_objs, vaddr2 % cfg.page_objs
+    s = paths.pin_page(s, v2)                       # pre-scope barrier
+    s = paths.touch(cfg, s, v2, slot2, obj_id=o)    # CAT + access bit + clock
+    return s
+
+
+def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray):
+    """Batched hybrid access.  Returns ``(state, rows[R, D])``.
+
+    Atlas uses *fine-grained* dereference scopes — one per smart-pointer
+    dereference (§4.2) — so each request pins its page only between fault-in
+    and the raw read, then releases it.  At most a handful of pages are
+    pinned at any time (current page + fill cursors), which is the paper's
+    live-lock bound."""
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
+
+    def body(i, carry):
+        s, out = carry
+        o = obj_ids[i]
+        s = _ensure_local_one(cfg, s, o)          # ends with the page pinned
+        vaddr = s.obj_loc[o]
+        v, slot = vaddr // cfg.page_objs, vaddr % cfg.page_objs
+        row = s.frames[s.frame_of[v], slot]       # raw-pointer use
+        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
+        s = paths.unpin_page(s, v)                # post-scope barrier
+        return s, out
+
+    s, out = lax.fori_loop(0, R, body, (s, out))
+    return s, out
+
+
+def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+           rows: jnp.ndarray):
+    """Batched write-through-local: fault in, overwrite rows, mark dirty."""
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    rows = rows.astype(cfg.dtype)
+
+    def body(i, s):
+        o = obj_ids[i]
+        s = _ensure_local_one(cfg, s, o)
+        vaddr = s.obj_loc[o]
+        v, slot = vaddr // cfg.page_objs, vaddr % cfg.page_objs
+        s = s._replace(frames=s.frames.at[s.frame_of[v], slot].set(rows[i]),
+                       dirty=s.dirty.at[v].set(True))
+        return paths.unpin_page(s, v)
+
+    return lax.fori_loop(0, R, body, s)
+
+
+# --------------------------------------------------------------------------
+# evacuation (concurrent compactor analogue, paper §4.3)
+# --------------------------------------------------------------------------
+
+def evacuate(cfg: PlaneConfig, s: st.PlaneState,
+             garbage_threshold: float | None = None,
+             max_pages: int = 16) -> st.PlaneState:
+    """Compact local pages whose dead-slot ratio exceeds the threshold.
+
+    Live objects are segregated by their access bit: recently-accessed
+    ("hot") objects are appended to a dedicated hot destination page,
+    the rest to a cold one — manufacturing the spatial locality that lets
+    subsequent accesses take the cheap paging path.  All access bits are
+    cleared at the end (paper: "cleared by the evacuator at the end of each
+    evacuation").
+
+    Evacuation is *incremental*: at most ``max_pages`` victims (the highest
+    garbage ratios) are compacted per call, bounding the pause the
+    concurrent evacuator imposes on the application — exactly the
+    tail-latency discipline the paper demands of memory management."""
+    thr = cfg.evac_garbage_threshold if garbage_threshold is None else garbage_threshold
+    P = cfg.page_objs
+
+    # victim selection: top-K local unpinned pages by garbage ratio
+    allocated_all = s.alloc_count
+    dead_all = allocated_all - s.live_count
+    ratio_all = dead_all.astype(jnp.float32) / jnp.maximum(allocated_all, 1)
+    eligible = ((s.backing == LOCAL) & (s.pin == 0) & (allocated_all > 0)
+                & (ratio_all > thr))
+    score = jnp.where(eligible, ratio_all, -1.0)
+    k = min(max_pages, cfg.num_vpages)
+    _, victims = lax.top_k(score, k)
+    victim_ok = score[victims] > -1.0
+
+    def page_body(i, s):
+        v = victims[i]
+        # re-check eligibility against the *current* state (earlier moves
+        # may have drained or freed this page)
+        allocated = s.alloc_count[v]
+        dead = allocated - s.live_count[v]
+        garbage_ratio = dead.astype(jnp.float32) / jnp.maximum(allocated, 1)
+        selected = (
+            victim_ok[i]
+            & (s.backing[v] == LOCAL)
+            & (s.pin[v] == 0)
+            & (allocated > 0)
+            & (garbage_ratio > thr)
+        )
+
+        def evacuate_page(s):
+            # pin the source so destination allocation can't page it out
+            # from under the compactor (Invariant #3 mechanism)
+            s = paths.pin_page(s, v)
+
+            def slot_body(p, s):
+                o = s.obj_of[v, p]
+
+                def move(s):
+                    row = s.frames[s.frame_of[v], p]
+                    hot = s.access[v, p]
+                    was_carded = s.cat[v, p]
+                    s, v_new, slot_new = lax.cond(
+                        hot,
+                        lambda s: paths._append_obj(cfg, s, o, row, "evac_hot_vpage"),
+                        lambda s: paths._append_obj(cfg, s, o, row, "evac_cold_vpage"),
+                        s)
+                    # the evacuator preserves card bits across the move (§4.3)
+                    s = s._replace(
+                        cat=s.cat.at[v_new, slot_new].set(was_carded),
+                        access=s.access.at[v_new, slot_new].set(hot),
+                        stats=st.bump(s.stats, evac_moved=1))
+                    return s
+
+                return lax.cond(o >= 0, move, lambda s: s, s)
+
+            s = lax.fori_loop(0, P, slot_body, s)
+            s = paths.unpin_page(s, v)
+            # the pin kept _kill_old_copy's GC away; reclaim explicitly now
+            still_here = s.backing[v] == LOCAL
+            s = lax.cond(jnp.logical_and(still_here, s.live_count[v] == 0),
+                         lambda s: paths.free_page(cfg, s, v), lambda s: s, s)
+            return s._replace(stats=st.bump(s.stats, evac_pages=1))
+
+        return lax.cond(selected, evacuate_page, lambda s: s, s)
+
+    s = lax.fori_loop(0, k, page_body, s)
+    return s._replace(access=jnp.zeros_like(s.access))
+
+
+# --------------------------------------------------------------------------
+# maintenance / introspection
+# --------------------------------------------------------------------------
+
+def writeback_all(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
+    """Flush every dirty local page to the slab (keeps pages resident)."""
+
+    def body(f, s):
+        v = s.vpage_of[f]
+        flush = jnp.logical_and(v >= 0, s.dirty[jnp.maximum(v, 0)])
+
+        def do(s):
+            slab = lax.dynamic_update_index_in_dim(s.slab, s.frames[f], v, axis=0)
+            return s._replace(slab=slab, dirty=s.dirty.at[v].set(False))
+
+        return lax.cond(flush, do, lambda s: s, s)
+
+    return lax.fori_loop(0, cfg.num_frames, body, s)
+
+
+def evict_all(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
+    """Page out every unpinned local page (shutdown / memory-pressure)."""
+
+    def body(f, s):
+        v = s.vpage_of[f]
+        can = jnp.logical_and(v >= 0, s.pin[jnp.maximum(v, 0)] == 0)
+        return lax.cond(can, lambda s: paths.page_out(cfg, s, f), lambda s: s, s)
+
+    return lax.fori_loop(0, cfg.num_frames, body, s)
+
+
+def peek(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray) -> jnp.ndarray:
+    """Read object rows wherever they live, with NO state change (oracle)."""
+    vaddr = s.obj_loc[obj_ids]
+    v, slot = vaddr // cfg.page_objs, vaddr % cfg.page_objs
+    local = s.backing[v] == LOCAL
+    f = jnp.maximum(s.frame_of[v], 0)
+    return jnp.where(local[:, None], s.frames[f, slot], s.slab[v, slot])
+
+
+def occupancy(cfg: PlaneConfig, s: st.PlaneState) -> jnp.ndarray:
+    """Fraction of local frames in use."""
+    return jnp.mean((s.vpage_of >= 0).astype(jnp.float32))
+
+
+def paging_fraction(cfg: PlaneConfig, s: st.PlaneState) -> jnp.ndarray:
+    """Fraction of allocated pages whose PSF is paging (paper Fig. 7)."""
+    allocated = s.backing != FREE
+    pg = jnp.sum((s.psf & allocated).astype(jnp.int32))
+    return pg / jnp.maximum(jnp.sum(allocated.astype(jnp.int32)), 1)
+
+
+def check_invariants(cfg: PlaneConfig, s: st.PlaneState) -> dict:
+    """Structural invariants (host-side; used by property tests)."""
+    sn = jax.device_get(s)
+    P, V, F = cfg.page_objs, cfg.num_vpages, cfg.num_frames
+    out = {}
+
+    # smart pointers and slot occupancy agree
+    ok = True
+    for o in range(cfg.num_objs):
+        va = int(sn.obj_loc[o])
+        if va < 0:
+            continue
+        ok &= sn.obj_of[va // P, va % P] == o
+    out["obj_loc_obj_of_consistent"] = bool(ok)
+
+    live = (sn.obj_of >= 0).sum(axis=1)
+    out["live_count_correct"] = bool(np.all(live == sn.live_count))
+    out["alloc_ge_live"] = bool(np.all(sn.alloc_count >= sn.live_count))
+
+    # frame table is a bijection on LOCAL pages
+    ok = True
+    for v in range(V):
+        if sn.backing[v] == LOCAL:
+            f = int(sn.frame_of[v])
+            ok &= 0 <= f < F and sn.vpage_of[f] == v
+        else:
+            ok &= sn.frame_of[v] == -1
+    for f in range(F):
+        v = int(sn.vpage_of[f])
+        if v >= 0:
+            ok &= sn.backing[v] == LOCAL and sn.frame_of[v] == f
+    out["frame_bijection"] = bool(ok)
+
+    out["pins_nonnegative"] = bool(np.all(sn.pin >= 0))
+    # outside an access batch the only standing pins are the fill cursors
+    cursors = [int(sn.fill_vpage), int(sn.evac_hot_vpage),
+               int(sn.evac_cold_vpage), int(sn.remote_fill_vpage)]
+    expected = np.zeros(V, np.int64)
+    for c in cursors:
+        if c >= 0:
+            expected[c] += 1
+    out["pins_are_cursor_pins"] = bool(np.all(sn.pin == expected))
+    out["free_pages_empty"] = bool(np.all(sn.live_count[sn.backing == FREE] == 0))
+    return out

@@ -1,0 +1,57 @@
+"""Synchronization protocol between the two paths (paper §4.2).
+
+JAX's functional semantics give us Invariant #1 for free (PSF is only
+written inside ``page_out``; a state value is never observed mid-mutation).
+The remaining invariants are realized with the per-page deref counts
+(``PlaneState.pin``):
+
+* Invariant #2 (object-in vs page-out): ``paths._victim_frame`` masks pinned
+  pages out of victim selection; ``plane.access`` pins each request's final
+  page before the batch gather and releases the pins afterwards.
+* Invariant #3 (deref scope vs evacuation): ``plane.evacuate`` skips pinned
+  pages, and pins the source page while compacting it.
+
+This module provides the batched pin helpers used by host-side runtimes
+(the serving engine holds pins *across* scheduler ticks while requests are
+in flight) plus the live-lock guard from §4.2: if too much data is pinned,
+the runtime forces pages onto the paging path so they can be swapped out
+and later paged back in without pointer updates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import state as st
+from .layout import LOCAL, PlaneConfig
+
+
+def pin_objects(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray
+                ) -> st.PlaneState:
+    """Open a dereference scope for each object (duplicates accumulate)."""
+    v = s.obj_loc[obj_ids] // cfg.page_objs
+    return s._replace(pin=s.pin.at[v].add(1))
+
+
+def unpin_objects(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray
+                  ) -> st.PlaneState:
+    """Close the scopes opened by :func:`pin_objects`."""
+    v = s.obj_loc[obj_ids] // cfg.page_objs
+    return s._replace(pin=s.pin.at[v].add(-1))
+
+
+def pinned_fraction(cfg: PlaneConfig, s: st.PlaneState) -> jnp.ndarray:
+    """Fraction of local frames whose page is pinned (live-lock monitor)."""
+    v = s.vpage_of
+    pinned = jnp.where(v >= 0, s.pin[jnp.maximum(v, 0)] > 0, False)
+    return jnp.mean(pinned.astype(jnp.float32))
+
+
+def force_paging_under_pressure(cfg: PlaneConfig, s: st.PlaneState,
+                                threshold: float = 0.75) -> st.PlaneState:
+    """Paper §4.2 live-lock mitigation: under memory pressure, flip the PSF
+    of pinned local pages to ``paging`` so that — once their scopes close —
+    they can be swapped out and re-fetched without pointer updates."""
+    pressure = pinned_fraction(cfg, s) >= threshold
+    pinned_local = (s.backing == LOCAL) & (s.pin > 0)
+    new_psf = jnp.where(jnp.logical_and(pressure, pinned_local), True, s.psf)
+    return s._replace(psf=new_psf)

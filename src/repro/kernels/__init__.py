@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the plane's compute hot spots.
+
+Per-kernel modules hold the ``pl.pallas_call`` + BlockSpec implementations;
+``ref.py`` holds the pure-jnp oracles; ``ops.py`` is the jitted dispatch
+surface used by the rest of the framework.
+
+Kernels:
+  * ``gather_objects``  — runtime-path object ingress (row gather)
+  * ``paged_attention`` — decode attention through the page table
+  * ``cat_update``      — always-on card-table profiling + CAR popcount
+  * ``compact``         — evacuator page assembly (hot/cold segregation)
+  * ``topk_pages``      — offload-space page scoring for sparse attention
+"""
+from . import ops, ref
+from .ops import (cat_update, compact_pages, gather_rows, page_scores,
+                  paged_attention)
+
+__all__ = ["ops", "ref", "cat_update", "compact_pages", "gather_rows",
+           "page_scores", "paged_attention"]

@@ -1,0 +1,74 @@
+"""Card-access-table update kernel: the always-on profiling hot path.
+
+Atlas's profiling must be cheap enough to leave on permanently (paper §1:
+"always-on profiling").  This kernel ORs the card bits for a batch of
+touched vaddrs into a packed uint32 bitmap and emits the per-page popcount
+(numerator of the CAR) in the same pass.
+
+Grid is over pages; each step scans the (small, scalar-prefetched) touch
+list and ORs the bits that fall on its page — branch-free SIMD, no
+scatter hazards from duplicate touches.
+
+Shapes: cat_bits [V, W] uint32 (W = ceil(P/32)), vaddrs [R] int32 (-1 skip)
+        -> (new_bits [V, W], popcount [V, 1] int32)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _popcount32(x):
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(idx_ref, bits_ref, out_bits_ref, count_ref, *,
+            page_objs: int, num_touch: int):
+    v = pl.program_id(0)
+    W = bits_ref.shape[1]
+    words = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+    def body(i, bits):
+        va = idx_ref[i]
+        pv = va // page_objs
+        slot = va % page_objs
+        hit = jnp.logical_and(va >= 0, pv == v)
+        word, bit = slot // 32, slot % 32
+        delta = jnp.where(jnp.logical_and(hit, words == word),
+                          jnp.uint32(1) << bit.astype(jnp.uint32),
+                          jnp.uint32(0))
+        return bits | delta
+
+    bits = jax.lax.fori_loop(0, num_touch, body, bits_ref[...])
+    out_bits_ref[...] = bits
+    count_ref[...] = jnp.sum(_popcount32(bits), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("page_objs", "interpret"))
+def cat_update(cat_bits: jnp.ndarray, vaddrs: jnp.ndarray, *,
+               page_objs: int, interpret: bool = False):
+    V, W = cat_bits.shape
+    R = vaddrs.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(V,),
+        in_specs=[pl.BlockSpec((1, W), lambda v, idx: (v, 0))],
+        out_specs=[pl.BlockSpec((1, W), lambda v, idx: (v, 0)),
+                   pl.BlockSpec((1, 1), lambda v, idx: (v, 0))],
+    )
+    kernel = functools.partial(_kernel, page_objs=page_objs, num_touch=R)
+    bits, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((V, W), jnp.uint32),
+                   jax.ShapeDtypeStruct((V, 1), jnp.int32)],
+        interpret=interpret,
+    )(vaddrs, cat_bits)
+    return bits, counts

@@ -1,0 +1,53 @@
+"""Evacuation compaction kernel: assemble destination pages from scattered
+live rows (hot/cold segregated by the caller's move plan).
+
+Each grid step builds one slot of a destination page by DMA-ing the source
+row selected by the scalar-prefetched move plan — the TPU analogue of the
+evacuator's copying loop.  Masked slots (-1) are zero-filled (fresh log
+pages).  The caller scatters the assembled pages into the frame pool.
+
+Shapes: pool [N, D] (N = F * P flat rows), plan [M * P] int32 flat row ids
+        -> pages [M, P, D]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(plan_ref, pool_ref, out_ref, *, page_objs: int):
+    m = pl.program_id(0)
+    p = pl.program_id(1)
+    valid = plan_ref[m * page_objs + p] >= 0
+    row = jnp.where(valid, pool_ref[...], jnp.zeros_like(pool_ref))
+    out_ref[...] = row.reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("page_objs", "interpret"))
+def compact_pages(pool: jnp.ndarray, plan: jnp.ndarray, *,
+                  page_objs: int, interpret: bool = False) -> jnp.ndarray:
+    """pool [N, D], plan [M*P] -> assembled pages [M, P, D]."""
+    N, D = pool.shape
+    P = page_objs
+    M = plan.shape[0] // P
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M, P),
+        in_specs=[
+            pl.BlockSpec((1, D),
+                         lambda m, p, plan: (jnp.maximum(plan[m * P + p], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda m, p, plan: (m, p, 0)),
+    )
+    kernel = functools.partial(_kernel, page_objs=P)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, P, D), pool.dtype),
+        interpret=interpret,
+    )(plan, pool)

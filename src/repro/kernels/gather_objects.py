@@ -1,0 +1,50 @@
+"""Runtime-path object gather: fetch R scattered rows from the far-tier pool.
+
+This is the batched "object-in" data movement of the hybrid plane.  On TPU
+the row indices are *scalar-prefetched* so each row's HBM->VMEM DMA is
+issued ahead of the copy — the TPU-native replacement for AIFM's RDMA reads
+of individual objects.
+
+Layout: pool [N, D] (N = V*P rows of the slab), idx [R] int32 (-1 = masked),
+out [R, D].  D must be a multiple of 128 (lane width); rows are blocked in
+groups of ``rows_per_block`` on the sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, pool_ref, out_ref):
+    # pool_ref: [1, D] block selected by the scalar-prefetched index;
+    # out_ref:  [1, D] block at row i.
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    out_ref[...] = jnp.where(valid, pool_ref[...], jnp.zeros_like(pool_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(pool: jnp.ndarray, idx: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """Pallas object gather.  pool [N, D], idx [R] -> [R, D]."""
+    N, D = pool.shape
+    R = idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, idx_ref: (jnp.maximum(idx_ref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, D), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)

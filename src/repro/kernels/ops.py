@@ -1,0 +1,104 @@
+"""Jitted production wrappers for the Pallas kernels.
+
+Dispatch policy (``impl``):
+  * ``"auto"``      — Pallas on TPU backends, jnp reference otherwise.  The
+    reference path is what the CPU-backend multi-pod dry-run lowers (Pallas
+    TPU custom calls cannot lower on CPU); on a real pod the Pallas path is
+    taken.  Both compute identical values (asserted by the kernel tests).
+  * ``"pallas"``    — force the compiled Pallas kernel.
+  * ``"interpret"`` — Pallas kernel body executed in interpret mode
+    (kernel-correctness validation on CPU).
+  * ``"ref"``       — force the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cat_update import cat_update as _cat_pallas
+from .compact import compact_pages as _compact_pallas
+from .gather_objects import gather_rows as _gather_pallas
+from .paged_attention import paged_attention as _paged_attn_pallas
+from .topk_pages import page_scores as _scores_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def gather_rows(pool, idx, *, impl="auto"):
+    m = _mode(impl)
+    if m == "ref":
+        return ref.gather_rows_ref(pool, idx)
+    return _gather_pallas(pool, idx, interpret=(m == "interpret"))
+
+
+def cat_update(cat_bits, vaddrs, *, page_objs: int, impl="auto"):
+    """Returns (bits, car[V] float32)."""
+    m = _mode(impl)
+    if m == "ref":
+        return ref.cat_update_ref(cat_bits, vaddrs, page_objs)
+    bits, counts = _cat_pallas(cat_bits, vaddrs, page_objs=page_objs,
+                               interpret=(m == "interpret"))
+    return bits, counts[:, 0].astype(jnp.float32) / jnp.float32(page_objs)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, page_lens, *, impl="auto"):
+    """q [B, H, Dh]; k/v_pages [KVH, F, P, Dh]; page_table [B, NP];
+    page_lens [B, NP] (valid rows per column).
+
+    Returns (out [B, H, Dh], row_used [B, NP, P] bool) — ``row_used`` is the
+    card-profiling signal: rows whose attention weight exceeded the
+    within-page mean."""
+    m = _mode(impl)
+    if m == "ref":
+        return ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                       page_lens)
+    B, H, Dh = q.shape
+    KVH = k_pages.shape[0]
+    G = H // KVH
+    out, used = _paged_attn_pallas(q.reshape(B, KVH, G, Dh), k_pages, v_pages,
+                                   page_table.reshape(-1),
+                                   page_lens.reshape(-1),
+                                   interpret=(m == "interpret"))
+    return out.reshape(B, H, Dh), used.astype(bool).any(axis=1)
+
+
+def lengths_to_page_lens(lengths, num_pages: int, page_tokens: int):
+    """Dense layout helper: [B] total lengths -> [B, NP] per-page rows."""
+    starts = jnp.arange(num_pages) * page_tokens
+    return jnp.clip(lengths[:, None] - starts[None, :], 0, page_tokens
+                    ).astype(jnp.int32)
+
+
+def compact_pages(pool, plan, *, page_objs: int, impl="auto"):
+    """pool [N, D], plan [M*P] flat row ids -> assembled pages [M, P, D]."""
+    m = _mode(impl)
+    if m == "ref":
+        D = pool.shape[-1]
+        M = plan.shape[0] // page_objs
+        return ref.gather_rows_ref(pool, plan).reshape(M, page_objs, D)
+    return _compact_pallas(pool, plan, page_objs=page_objs,
+                           interpret=(m == "interpret"))
+
+
+def page_scores(q, kmax, kmin, *, impl="auto"):
+    """q [B, H, Dh] -> scores [B, KVH, NP] float32."""
+    m = _mode(impl)
+    if m == "ref":
+        return ref.page_scores_ref(q, kmax, kmin)
+    B, H, Dh = q.shape
+    KVH, NP, _ = kmax.shape
+    G = H // KVH
+    blk = NP if NP < 128 else 128
+    while NP % blk:
+        blk //= 2
+    return _scores_pallas(q.reshape(B, KVH, G, Dh), kmax, kmin,
+                          block_pages=blk, interpret=(m == "interpret"))

@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>_ref`` matches the semantics of the corresponding kernel in
+``<name>.py``; the kernel tests sweep shapes/dtypes and assert allclose
+against these.  The production ``ops`` wrappers fall back to these on
+non-TPU backends (interpret-mode Pallas is used for validation only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# object gather / scatter (runtime-path ingress / egress)
+# --------------------------------------------------------------------------
+
+def gather_rows_ref(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """pool: [N, D]; idx: [R] int32 -> [R, D].  Negative idx yields zeros
+    (masked slots in a fetch list)."""
+    rows = pool[jnp.maximum(idx, 0)]
+    return jnp.where((idx >= 0)[:, None], rows, 0).astype(pool.dtype)
+
+
+def scatter_rows_ref(pool: jnp.ndarray, idx: jnp.ndarray,
+                     rows: jnp.ndarray) -> jnp.ndarray:
+    """Write rows[i] -> pool[idx[i]] where idx[i] >= 0 (idx entries unique)."""
+    safe = jnp.maximum(idx, 0)
+    masked = jnp.where((idx >= 0)[:, None], rows.astype(pool.dtype), pool[safe])
+    return pool.at[safe].set(masked)
+
+
+# --------------------------------------------------------------------------
+# card access table update (always-on profiling)
+# --------------------------------------------------------------------------
+
+def cat_update_ref(cat_bits: jnp.ndarray, vaddrs: jnp.ndarray,
+                   page_objs: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Set card bits for touched vaddrs in a packed bitmap.
+
+    cat_bits: [V, W] uint32 where W = ceil(page_objs/32);
+    vaddrs: [R] int32 (negative = skip).
+    Returns (new_bits, car[V] float32) with CAR = popcount/page_objs."""
+    V, W = cat_bits.shape
+    v = vaddrs // page_objs
+    slot = vaddrs % page_objs
+    word, bit = slot // 32, slot % 32
+    valid = vaddrs >= 0
+    upd = jnp.where(valid, jnp.uint32(1) << bit.astype(jnp.uint32), jnp.uint32(0))
+    pos = jnp.where(valid, v * W + word, 0)
+    # duplicate positions must OR together: sequential scatter-OR
+    flat_new = jnp.zeros((V * W,), jnp.uint32)
+
+    def body(i, m):
+        return m.at[pos[i]].set(m[pos[i]] | upd[i])
+
+    flat_new = jax.lax.fori_loop(0, vaddrs.shape[0], body, flat_new)
+    bits = cat_bits | flat_new.reshape(V, W)
+    pc = _popcount32(bits).sum(axis=1).astype(jnp.float32)
+    return bits, pc / jnp.float32(page_objs)
+
+
+def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+# --------------------------------------------------------------------------
+# paged decode attention (the paging-path consumer)
+# --------------------------------------------------------------------------
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                        page_lens: jnp.ndarray) -> jnp.ndarray:
+    """Decode attention over a paged KV store.
+
+    q:          [B, H, Dh]           (one new token per sequence)
+    k_pages:    [KVH, F, P, Dh]      (frame pool, per kv head)
+    v_pages:    [KVH, F, P, Dh]
+    page_table: [B, NP] int32        (frame id per table column, -1 unused)
+    page_lens:  [B, NP] int32        (valid rows in each column's frame)
+    returns     [B, H, Dh]
+
+    H = KVH * G (GQA groups).  Softmax over the first ``page_lens[b, j]``
+    rows of each referenced frame (decode attention is permutation-
+    invariant over past KV, so columns may be any page subset and rows may
+    be packed)."""
+    B, H, Dh = q.shape
+    KVH, F, P, _ = k_pages.shape
+    NP = page_table.shape[1]
+    G = H // KVH
+
+    def per_seq(qb, pt, pl):
+        # gather pages: [KVH, NP, P, Dh] -> [KVH, NP*P, Dh]
+        safe = jnp.maximum(pt, 0)
+        k = k_pages[:, safe].reshape(KVH, NP * P, Dh)
+        v = v_pages[:, safe].reshape(KVH, NP * P, Dh)
+        qg = qb.reshape(KVH, G, Dh)
+        scores = jnp.einsum("kgd,ksd->kgs", qg.astype(jnp.float32),
+                            k.astype(jnp.float32))
+        scores *= 1.0 / jnp.sqrt(jnp.float32(Dh))
+        row = jnp.tile(jnp.arange(P), NP)
+        valid = (row < jnp.repeat(pl, P)) & jnp.repeat(pt >= 0, P)
+        scores = jnp.where(valid[None, None, :], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("kgs,ksd->kgd", w, v.astype(jnp.float32))
+        # card profiling signal: a row is "used" if its weight is above the
+        # within-page mean (flat pages mark everything -> paging; skewed
+        # pages mark the few heavy rows -> runtime)
+        wp = w.reshape(KVH, G, NP, P)
+        page_mass = wp.sum(-1, keepdims=True)
+        used = (wp * P > page_mass).any(axis=(0, 1))     # [NP, P]
+        used &= valid.reshape(NP, P)
+        return out.reshape(H, Dh).astype(q.dtype), used
+
+    return jax.vmap(per_seq)(q, page_table, page_lens)
+
+
+# --------------------------------------------------------------------------
+# evacuation compaction (hot/cold segregation)
+# --------------------------------------------------------------------------
+
+def compact_rows_ref(frames: jnp.ndarray, src: jnp.ndarray,
+                     dst_page: jnp.ndarray, dst_rows: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Assemble destination pages from scattered source rows.
+
+    frames:   [F, P, D] row pool
+    src:      [M, P] int32 flat row index (frame*P + slot) per dst slot, -1 keep
+    dst_page: [M] int32 destination frame per assembled page
+    dst_rows: unused placeholder (API symmetry)
+    Moves are disjoint: no src row is also a dst slot."""
+    F, P, D = frames.shape
+    flat = frames.reshape(F * P, D)
+    gathered = flat[jnp.maximum(src, 0)]                      # [M, P, D]
+    keep = frames[jnp.maximum(dst_page, 0)]                   # [M, P, D]
+    page = jnp.where((src >= 0)[..., None], gathered, keep)
+    valid = dst_page >= 0
+    out = frames.at[jnp.maximum(dst_page, 0)].set(
+        jnp.where(valid[:, None, None], page, keep))
+    return out
+
+
+# --------------------------------------------------------------------------
+# sparse-attention page scoring (offload-space computation)
+# --------------------------------------------------------------------------
+
+def page_scores_ref(q: jnp.ndarray, kmax: jnp.ndarray, kmin: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Quest-style upper-bound page scores against far-resident summaries.
+
+    q:    [B, H, Dh]
+    kmax: [KVH, NP, Dh]  per-page elementwise max of keys
+    kmin: [KVH, NP, Dh]  per-page elementwise min of keys
+    returns [B, KVH, NP] float32: sum_d max(q*kmax, q*kmin), max over the
+    GQA group."""
+    B, H, Dh = q.shape
+    KVH = kmax.shape[0]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Dh).astype(jnp.float32)
+    # per-dim bound: max(q_d * kmax_d, q_d * kmin_d), summed over d
+    ub = jnp.maximum(qg[:, :, :, None, :] * kmax.astype(jnp.float32)[None, :, None],
+                     qg[:, :, :, None, :] * kmin.astype(jnp.float32)[None, :, None])
+    return ub.sum(-1).max(axis=2)

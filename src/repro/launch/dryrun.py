@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective evidence.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json
+
+Per cell this produces:
+  * ``compiled.memory_analysis()``  -> bytes/device (argument/output/temp/gen)
+  * ``compiled.cost_analysis()``    -> HLO flops / bytes accessed (NOTE:
+    while-loop bodies are counted ONCE by XLA — see analysis/analytic.py
+    for the trip-count-corrected model; both are recorded)
+  * collective operand bytes parsed from the compiled HLO
+    (analysis/hlo.py), with while-body multipliers applied.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgs
+from repro.analysis import analytic, hlo
+from repro.launch import mesh as mesh_lib
+from repro.models import api
+from repro.optim.optimizers import get_optimizer
+
+
+def _sharding(mesh, spec_tree):
+    return mesh_lib.sharding_tree(mesh, spec_tree)
+
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= _axis_size(mesh, a)
+        return n
+    if ax == "dp":
+        n = mesh.shape.get("data", 1)
+        return n * mesh.shape.get("pod", 1)
+    if ax == "tp":
+        return mesh.shape.get("model", 1)
+    return mesh.shape.get(ax, 1)
+
+
+def arg_bytes_per_device(struct_tree, spec_tree, mesh) -> dict:
+    """Per-device bytes of an argument tree under its logical sharding.
+    ``host_tier`` separates far-tier slab buffers (leaf path contains
+    'slab'): on real hardware these live in host memory
+    (memory_kind=pinned_host), not HBM."""
+    total = {"device": 0.0, "host_tier": 0.0}
+
+    def walk(struct, spec, path):
+        if isinstance(struct, jax.ShapeDtypeStruct):
+            div = 1
+            if isinstance(spec, tuple):
+                for ax in spec:
+                    div *= _axis_size(mesh, ax)
+            n = 1
+            for d in struct.shape:
+                n *= d
+            b = n * struct.dtype.itemsize / max(div, 1)
+            key = "host_tier" if "slab" in path else "device"
+            total[key] += b
+            return
+        if isinstance(struct, dict):
+            for k in struct:
+                sp = spec[k] if isinstance(spec, dict) else spec
+                walk(struct[k], sp, path + "/" + str(k))
+            return
+        if hasattr(struct, "_fields"):
+            for k in struct._fields:
+                sp = getattr(spec, k) if hasattr(spec, "_fields") else spec
+                walk(getattr(struct, k), sp, path + "/" + k)
+            return
+        if isinstance(struct, (tuple, list)):
+            spc = spec if isinstance(spec, (tuple, list)) and len(spec) == len(struct) and not _is_spec(spec) else [spec] * len(struct)
+            for i, s in enumerate(struct):
+                walk(s, spc[i], path + f"/{i}")
+            return
+
+    def _is_spec(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, (str, tuple)) for e in x)
+
+    walk(struct_tree, spec_tree, "")
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, layers_override=None):
+    """Returns (fn, example_args, in_shardings, donate) for one cell."""
+    cfg = cfgs.get_config(arch)
+    if layers_override:
+        cfg = analytic.override_layers(cfg, layers_override)
+    shape = cfgs.SHAPES[shape_name]
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+
+    bs = api.batch_specs(cfg, shape)
+    batch_struct = {k: v[0] for k, v in bs.items()}
+    batch_spec = {k: v[1] for k, v in bs.items()}
+
+    if shape.kind == "train":
+        opt_name = "adafactor" if arch.startswith("kimi") else "adamw"
+        opt = get_optimizer(opt_name)
+        params_struct = api.param_shapes(cfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = api.make_train_step(cfg, opt)
+        in_shardings = (
+            _sharding(mesh, api.param_pspecs(cfg)),
+            _sharding(mesh, api.opt_state_pspecs(cfg, opt_name)),
+            mesh_lib.sharding_tree(mesh, None),
+            _sharding(mesh, batch_spec),
+        )
+        args = (params_struct, opt_struct, step_struct, batch_struct)
+        specs = (api.param_pspecs(cfg), api.opt_state_pspecs(cfg, opt_name),
+                 None, batch_spec)
+        return fn, args, in_shardings, (0, 1), specs
+
+    if shape.kind == "prefill":
+        fn = api.make_prefill_step(cfg)
+        params_struct = api.param_shapes(cfg)
+        in_shardings = (_sharding(mesh, api.param_pspecs(cfg)),
+                        _sharding(mesh, batch_spec))
+        specs = (api.param_pspecs(cfg), batch_spec)
+        return fn, (params_struct, batch_struct), in_shardings, (), specs
+
+    # decode / decode_long
+    shards = dp if shape.kind == "decode_long" else 1
+    fn = api.decode_step(cfg, shape, shards=shards)
+    params_struct = api.param_shapes(cfg)
+    state_struct = jax.eval_shape(
+        lambda: api.init_decode_state(cfg, shape, shards=shards))
+    in_shardings = (
+        _sharding(mesh, api.param_pspecs(cfg)),
+        _sharding(mesh, api.serve_state_pspecs(cfg, shape, shards)),
+        _sharding(mesh, batch_spec["tokens"]),
+    )
+    args = (params_struct, state_struct, batch_struct["tokens"])
+    specs = (api.param_pspecs(cfg), api.serve_state_pspecs(cfg, shape, shards),
+             batch_spec["tokens"])
+    return fn, args, in_shardings, (1,), specs
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             layers_override=None, want_text: bool = False) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "status": "ok"}
+    t0 = time.time()
+    try:
+        fn, args, in_shardings, donate, specs = build_cell(
+            arch, shape_name, mesh, layers_override=layers_override)
+        acc = {"device": 0.0, "host_tier": 0.0}
+        names = ["params", "opt_state", "step", "batch", "serve_state"]
+        rec["arg_bytes_per_device"] = {}
+        for i, (st, sp) in enumerate(zip(args, specs)):
+            ab = arg_bytes_per_device(st, sp, mesh)
+            label = ("params" if i == 0 else
+                     "arg%d" % i)
+            rec["arg_bytes_per_device"][label] = ab
+            acc["device"] += ab["device"]
+            acc["host_tier"] += ab["host_tier"]
+        rec["arg_bytes_per_device"]["total"] = acc
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec["memory"] = {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")}
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals", "utilization")}
+        text = compiled.as_text()
+        rec["collectives"] = hlo.collective_summary(text)
+        rec["hlo_bytes"] = len(text)
+        if want_text:
+            rec["hlo_text"] = text
+        rec["analytic"] = analytic.cell_model(arch, shape_name, mesh_kind)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                        "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="results/dryrun.json")
+    p.add_argument("--layers", type=int, default=0,
+                   help="override layer count (depth probes)")
+    p.add_argument("--layout", default="2d", choices=["2d", "fsdp"],
+                   help="logical sharding layout (§Perf cell A it.3)")
+    args = p.parse_args()
+    mesh_lib.set_layout(args.layout)
+
+    todo = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for a, sh, skipped in cfgs.cells():
+            for m in meshes:
+                todo.append((a, sh, m))
+    else:
+        for m in meshes:
+            todo.append((args.arch, args.shape, m))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok" and not args.layers}
+
+    for a, sh, m in todo:
+        if (a, sh, m) in done:
+            print(f"[skip cached] {a} {sh} {m}", flush=True)
+            continue
+        print(f"[dryrun] {a} {sh} {m} ...", flush=True)
+        rec = run_cell(a, sh, m, layers_override=args.layers or None)
+        print(f"  -> {rec['status']} lower={rec.get('lower_s')}s "
+              f"compile={rec.get('compile_s')}s", flush=True)
+        if rec["status"] == "fail":
+            print(rec["error"], flush=True)
+        results = [r for r in results
+                   if (r["arch"], r["shape"], r["mesh"]) != (a, sh, m)]
+        results.append(rec)
+        json.dump(results, open(args.out, "w"), indent=1)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"[dryrun] {ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Production mesh + logical-axis resolution.
+
+Logical spec axes used throughout the model code:
+  * ``"dp"`` — data/FSDP; resolves to ``("pod", "data")`` when a pod axis
+    exists, else ``("data",)``.
+  * ``"tp"`` — tensor parallel; resolves to ``"model"``.
+
+Nothing in this module touches jax device state at import time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over the locally visible devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Logical-axis layout: "2d" (default) = FSDP over (pod, data) x TP over
+# model; "fsdp" = pure ZeRO-3 over every mesh axis, no tensor parallelism
+# (dense-arch training at large global batch — §Perf iteration 3).
+_LAYOUT = "2d"
+
+
+def set_layout(name: str):
+    global _LAYOUT
+    assert name in ("2d", "fsdp"), name
+    _LAYOUT = name
+
+
+def get_layout() -> str:
+    return _LAYOUT
+
+
+def _axis(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    if logical == "batch":
+        # data-parallel batch axis: never includes "model" (batch size may
+        # be smaller than the full chip count under the fsdp layout)
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if logical == "dp":
+        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        if _LAYOUT == "fsdp":
+            axes = axes + ("model",)
+        return axes
+    if logical == "tp":
+        return None if _LAYOUT == "fsdp" else "model"
+    return logical
+
+
+def resolve(mesh: Mesh, spec) -> P:
+    """Map a logical spec tuple to a concrete PartitionSpec for ``mesh``."""
+    if spec is None:
+        return P()
+    out = []
+    for ax in spec:
+        r = _axis(mesh, ax)
+        out.append(r)
+    return P(*out)
+
+
+def is_spec(s) -> bool:
+    """A logical spec leaf: plain tuple of axis entries (str / None /
+    tuple-of-str); NamedTuples (state containers) are NOT leaves."""
+    if s is None:
+        return True
+    if not isinstance(s, tuple) or hasattr(s, "_fields"):
+        return False
+    return all(e is None or isinstance(e, str)
+               or (isinstance(e, tuple)
+                   and all(isinstance(x, str) for x in e))
+               for e in s)
+
+
+def resolve_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: resolve(mesh, s), spec_tree, is_leaf=is_spec)
+
+
+def sharding_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        resolve_tree(mesh, spec_tree),
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def constrain(x, spec):
+    """Logical sharding constraint; no-op when tracing without a mesh."""
+    try:
+        mesh = jax._src.mesh.thread_resources.env.physical_mesh
+    except Exception:
+        return x
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(mesh, spec)))

@@ -1,0 +1,576 @@
+"""Model API: one surface over all families for the launcher, dry-run,
+trainer and serving engine.
+
+  * ``model_defs(cfg)`` / ``init_params`` / ``param_pspecs``
+  * ``loss(cfg)``                              — train/prefill forward+loss
+  * ``batch_specs(cfg, shape)``                — input ShapeDtypeStructs + specs
+  * ``decode_state_spec(cfg, shape, mesh_dp)`` — serve-state struct + specs
+  * ``init_decode_state(cfg, shape, mesh_dp)`` — concrete serve state
+  * ``decode_step(cfg)``                       — (params, state, tokens) ->
+                                                 (state, logits)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.core import expertplane, kvplane
+from . import attention as attn_lib
+from . import encdec as encdec_lib
+from . import lm as lm_lib
+from . import mlp as mlp_lib
+from . import ssm as ssm_lib
+from .common import DP, TP, dense, init_params as _init, pspecs as _pspecs, \
+    rms_norm, shapes as _shapes
+from .lm import pad_vocab
+
+PAGE_TOKENS = 64          # KV page size (tokens) across the framework
+SPARSE_TOPK = 64          # pages selected per sparse decode step (global)
+SPARSE_LOCAL_FRAMES = 96  # frames per shard in sparse mode
+FETCH_BUDGET = 4          # pages fetched per shard per step
+KIMI_HOT_EXPERTS = 32     # resident experts per layer (kimi serve)
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    if cfg.family == "encdec":
+        return encdec_lib.model_defs(cfg)
+    return lm_lib.model_defs(cfg)
+
+
+def init_params(cfg: ArchConfig, key):
+    return _init(model_defs(cfg), key)
+
+
+def param_shapes(cfg: ArchConfig):
+    return _shapes(model_defs(cfg))
+
+
+def param_pspecs(cfg: ArchConfig):
+    return _pspecs(model_defs(cfg))
+
+
+def opt_state_pspecs(cfg: ArchConfig, opt_name: str):
+    """Optimizer-state logical specs mirroring the parameter specs."""
+    ps = param_pspecs(cfg)
+    if opt_name == "adamw":
+        return {"mu": ps, "nu": ps}
+    if opt_name == "adafactor":
+        def per(spec):
+            spec = tuple(spec)
+            if len(spec) >= 2:
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        return {"f": jax.tree.map(per, ps,
+                                  is_leaf=lambda s: isinstance(s, tuple))}
+    raise ValueError(opt_name)
+
+
+def loss(cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        return functools.partial(encdec_lib.loss_fn, cfg)
+    return functools.partial(lm_lib.loss_fn, cfg)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Returns {name: (ShapeDtypeStruct, logical_spec)} for the step input."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = (jax.ShapeDtypeStruct((B, S), i32), ("batch", None))
+        if shape.kind == "train":
+            out["labels"] = (jax.ShapeDtypeStruct((B, S), i32), ("batch", None))
+        if cfg.family == "encdec":
+            senc = max(S // 4, 128)
+            out["frames"] = (jax.ShapeDtypeStruct((B, senc, cfg.d_model),
+                                                  cfg.dtype), ("batch", None, None))
+        if cfg.frontend == "vision":
+            out["patches"] = (jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq, cfg.frontend_dim), cfg.dtype),
+                ("batch", None, None))
+    else:  # decode / decode_long: one new token per sequence
+        # batch=1 (long-context) cannot shard over dp -> replicate
+        tok_spec = (DP,) if B > 1 else (None,)
+        out["tokens"] = (jax.ShapeDtypeStruct((B,), i32), tok_spec)
+    return out
+
+
+# --------------------------------------------------------------------------
+# serve state construction
+# --------------------------------------------------------------------------
+
+def _kv_cfg_dense(cfg: ArchConfig, B: int, S: int) -> kvplane.KVPlaneConfig:
+    NP = -(-S // PAGE_TOKENS)
+    return kvplane.KVPlaneConfig(
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, page_tokens=PAGE_TOKENS,
+        num_pages=NP, num_frames=B * NP, batch=B, dtype=cfg.dtype)
+
+
+def _kv_cfg_window(cfg: ArchConfig, B: int) -> kvplane.KVPlaneConfig:
+    NP = -(-cfg.sliding_window // PAGE_TOKENS)
+    return kvplane.KVPlaneConfig(
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, page_tokens=PAGE_TOKENS,
+        num_pages=NP, num_frames=B * NP, batch=B, dtype=cfg.dtype)
+
+
+def _kv_cfg_sparse(cfg: ArchConfig, S: int, shards: int
+                   ) -> kvplane.KVPlaneConfig:
+    NP = -(-S // (PAGE_TOKENS * shards))
+    frames = min(SPARSE_LOCAL_FRAMES, NP)
+    return kvplane.KVPlaneConfig(
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, page_tokens=PAGE_TOKENS,
+        num_pages=NP, num_frames=frames, batch=1,
+        sparse_topk=min(max(SPARSE_TOPK // shards, 4), frames),
+        fetch_budget=min(FETCH_BUDGET, frames), dtype=cfg.dtype)
+
+
+class ServeState(NamedTuple):
+    """Generic serve-state container: family-specific pytrees inside."""
+    lengths: jnp.ndarray          # [B] tokens already in context
+    kv: Any                       # stacked plane states / recurrent states
+    extra: Any                    # family-specific (cross KV, expert planes…)
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    if cfg.family == "ssm":
+        return cfg.n_layers // 2
+    if cfg.family == "hybrid":
+        return 6
+    if cfg.family == "encdec":
+        return cfg.dec_layers
+    return cfg.n_layers
+
+
+def _stack(n, make_one):
+    return jax.vmap(lambda _: make_one())(jnp.arange(n))
+
+
+def init_decode_state(cfg: ArchConfig, shape: ShapeConfig, shards: int = 1,
+                      enc_len: int = 0) -> ServeState:
+    """Concrete zero-initialized serve state (used at small scale and as the
+    eval_shape template for the dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    L = _n_groups(cfg)
+    long = shape.kind == "decode_long"
+    fam = cfg.family
+    lengths = jnp.zeros((B,), jnp.int32)
+    extra = ()
+
+    if fam == "ssm":   # xLSTM: recurrent states, O(1) in S
+        d_inner = 2 * cfg.d_model
+        dh_m = d_inner // cfg.n_heads
+        dh_s = cfg.d_model // cfg.n_heads
+        def one():
+            return {
+                "mlstm_s": jnp.zeros((B, cfg.n_heads, dh_m, dh_m), jnp.float32),
+                "mlstm_n": jnp.zeros((B, cfg.n_heads, dh_m, 1), jnp.float32),
+                "slstm": (jnp.zeros((B, cfg.n_heads, dh_s), jnp.float32),) * 2
+                + (jnp.zeros((B, cfg.n_heads, dh_s), jnp.float32) - 10.0,
+                   jnp.zeros((B, cfg.n_heads, dh_s), jnp.float32)),
+            }
+        return ServeState(lengths, _stack(L, one), extra)
+
+    if fam == "hybrid":   # zamba2: per-group 5 mamba states + shared-attn KV
+        d_inner = 2 * cfg.d_model
+        H = d_inner // 64
+        N = cfg.ssm_state
+        if long:
+            kvc = _kv_cfg_sparse(cfg, S, shards)
+            make_kv = lambda: _stack(shards, lambda: kvplane.init(kvc))
+        else:
+            kvc = _kv_cfg_dense(cfg, B, S)
+            make_kv = lambda: kvplane.init(kvc)
+        def one():
+            return {
+                "conv": jnp.zeros((5, B, 3, d_inner + 2 * N), cfg.dtype),
+                "ssm": jnp.zeros((5, B, H, N, 64), jnp.float32),
+                "attn_kv": make_kv(),
+            }
+        tail = {"conv": jnp.zeros((2, B, 3, d_inner + 2 * N), cfg.dtype),
+                "ssm": jnp.zeros((2, B, H, N, 64), jnp.float32)}
+        return ServeState(lengths, _stack(L, one), tail)
+
+    if fam == "encdec":
+        senc = enc_len or max(S // 4, 128)
+        kvc = _kv_cfg_dense(cfg, B, S)
+        kv = _stack(L, lambda: kvplane.init(kvc))
+        cross = {
+            "k": jnp.zeros((L, B, senc, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+            "v": jnp.zeros((L, B, senc, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        }
+        return ServeState(lengths, kv, cross)
+
+    # decoder-only attention families (dense / moe / vlm)
+    if long:
+        if cfg.sliding_window:
+            kvc = _kv_cfg_window(cfg, B)
+            kv = _stack(L, lambda: kvplane.init(kvc))
+        else:
+            kvc = _kv_cfg_sparse(cfg, S, shards)
+            kv = _stack(L, lambda: _stack(shards, lambda: kvplane.init(kvc)))
+    else:
+        kvc = _kv_cfg_dense(cfg, B, S)
+        kv = _stack(L, lambda: kvplane.init(kvc))
+
+    if cfg.atlas_experts and cfg.moe_experts:
+        epc = _expert_cfg(cfg)
+        extra = _stack(L, lambda: expertplane.init(epc))
+    return ServeState(lengths, kv, extra)
+
+
+def _expert_cfg(cfg: ArchConfig) -> expertplane.ExpertPlaneConfig:
+    return expertplane.ExpertPlaneConfig(
+        n_experts=cfg.moe_experts, d_model=cfg.d_model, d_ff=cfg.d_ff,
+        hot_slots=min(KIMI_HOT_EXPERTS, cfg.moe_experts), topk=cfg.moe_topk,
+        fetch_budget=cfg.moe_topk, dtype=cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode step
+# --------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens):
+    vp = pad_vocab(cfg.vocab)
+    one_hot = jax.nn.one_hot(tokens, vp, dtype=params["embed"].dtype)
+    x = jnp.einsum("bv,vd->bd", one_hot, params["embed"])
+    return (x * math.sqrt(cfg.d_model))[:, None, :]     # [B, 1, d]
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_ln"])
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]
+                          ).astype(jnp.float32)[:, 0]
+    return dense(x, params["lm_head"]).astype(jnp.float32)[:, 0]
+
+
+def _attn_qkv(gp, x, lengths, cfg):
+    """Project one decode token; returns q [B,H,Dh], k/v [B,KVH,Dh]
+    (RoPE applied at absolute positions)."""
+    B = x.shape[0]
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    from .common import rope
+    q = dense(x, gp["wq"]).reshape(B, 1, H, Dh)
+    k = dense(x, gp["wk"]).reshape(B, 1, KVH, Dh)
+    v = dense(x, gp["wv"]).reshape(B, 1, KVH, Dh)
+    q = rope(q, lengths[:, None], cfg.rope_theta)
+    k = rope(k, lengths[:, None], cfg.rope_theta)
+    return q[:, 0], k[:, 0], v[:, 0]
+
+
+def _plane_attend(cfg, kvc, gp, x2d, kv, lengths, mode):
+    """One attention application through the KV plane.  x2d: [B, 1, d]."""
+    q, k, v = _attn_qkv(gp, x2d, lengths, cfg)
+    if mode == "dense":
+        kv = kvplane.append_dense(kvc, kv, k, v, lengths)
+        out, kv = kvplane.attend_dense(kvc, kv, q, lengths + 1)
+    elif mode == "window":
+        kv = kvplane.append_window(kvc, kv, k, v, lengths)
+        out, kv = kvplane.attend_window(kvc, kv, q, lengths + 1)
+    else:  # sparse (sharded)
+        kv = kvplane.append_sharded(kvc, kv, k, v, lengths)
+        out, kv = kvplane.sharded_sparse_decode(kvc, kv, q, lengths + 1)
+    B = x2d.shape[0]
+    out = dense(out.reshape(B, 1, cfg.n_heads * cfg.hd), gp["wo"])
+    return out, kv
+
+
+def decode_step(cfg: ArchConfig, shape: ShapeConfig, shards: int = 1):
+    """Build the jittable serve step: (params, state, tokens) ->
+    (state, logits [B, vocab_padded])."""
+    long = shape.kind == "decode_long"
+    fam = cfg.family
+    B, S = shape.global_batch, shape.seq_len
+
+    if fam in ("dense", "moe", "vlm"):
+        if long and cfg.sliding_window:
+            kvc, mode = _kv_cfg_window(cfg, B), "window"
+        elif long:
+            kvc, mode = _kv_cfg_sparse(cfg, S, shards), "sparse"
+        else:
+            kvc, mode = _kv_cfg_dense(cfg, B, S), "dense"
+        epc = _expert_cfg(cfg) if (cfg.atlas_experts and cfg.moe_experts) else None
+
+        def step(params, state: ServeState, tokens):
+            x = _embed_tokens(cfg, params, tokens)
+            lengths = state.lengths
+
+            def body(carry, xs):
+                x = carry
+                if epc is not None:
+                    gp, kv, ep = xs
+                else:
+                    gp, kv = xs
+                h = rms_norm(x, gp["ln1"])
+                o, kv = _plane_attend(cfg, kvc, gp["attn"], h, kv, lengths,
+                                      mode)
+                x = x + o
+                h = rms_norm(x, gp["ln2"])
+                if cfg.moe_experts and epc is not None:
+                    o2d, ep = expertplane.moe_decode(
+                        epc, ep, gp["moe"]["router"], h[:, 0],
+                        gp["moe"]["wi"], gp["moe"]["wg"], gp["moe"]["wo"])
+                    x = x + o2d[:, None, :]
+                    return x, (kv, ep)
+                elif cfg.moe_experts:
+                    o, _aux = mlp_lib.moe(gp["moe"], h,
+                                          n_experts=cfg.moe_experts,
+                                          topk=cfg.moe_topk)
+                    x = x + o
+                else:
+                    x = x + mlp_lib.mlp(gp["mlp"], h)
+                return x, (kv,)
+
+            xs = ((params["blocks"], state.kv, state.extra) if epc is not None
+                  else (params["blocks"], state.kv))
+            x, new = lax.scan(body, x, xs)
+            kv_new = new[0]
+            extra_new = new[1] if epc is not None else state.extra
+            logits = _logits(cfg, params, x)
+            return ServeState(lengths + 1, kv_new, extra_new), logits
+
+        return step
+
+    if fam == "ssm":   # xLSTM
+        def step(params, state: ServeState, tokens):
+            x = _embed_tokens(cfg, params, tokens)
+            lengths = state.lengths
+
+            def body(carry, xs):
+                x = carry
+                gp, st = xs
+                x, (s_m, n_m) = ssm_lib.mlstm_block(
+                    gp["mlstm"], x, cfg, (st["mlstm_s"], st["mlstm_n"]),
+                    chunk=1)
+                x, s_s = ssm_lib.slstm_block(gp["slstm"], x, cfg, st["slstm"])
+                return x, {"mlstm_s": s_m, "mlstm_n": n_m, "slstm": s_s}
+
+            x, kv_new = lax.scan(body, x, (params["blocks"], state.kv))
+            return (ServeState(lengths + 1, kv_new, state.extra),
+                    _logits(cfg, params, x))
+
+        return step
+
+    if fam == "hybrid":   # zamba2
+        if long:
+            kvc, mode = _kv_cfg_sparse(cfg, S, shards), "sparse"
+        else:
+            kvc, mode = _kv_cfg_dense(cfg, B, S), "dense"
+
+        def step(params, state: ServeState, tokens):
+            x = _embed_tokens(cfg, params, tokens)
+            lengths = state.lengths
+            sp = params["shared_attn"]
+
+            def one_mamba(x, p, conv, ssm_s):
+                y, (nc, ns) = ssm_lib.mamba2_block(p, x, cfg, (conv, ssm_s),
+                                                   chunk=1)
+                return y, nc, ns
+
+            def body(carry, xs):
+                x = carry
+                gp, st = xs
+
+                def mamba_scan(x, inner):
+                    p, conv, ssm_s = inner
+                    y, nc, ns = one_mamba(x, p, conv, ssm_s)
+                    return y, (nc, ns)
+
+                x, (nconv, nssm) = lax.scan(
+                    mamba_scan, x, (gp["mamba"], st["conv"], st["ssm"]))
+                h = rms_norm(x, sp["ln1"])
+                o, kv = _plane_attend(cfg, kvc, sp["attn"], h, st["attn_kv"],
+                                      lengths, mode)
+                x = x + o
+                h = rms_norm(x, sp["ln2"])
+                x = x + mlp_lib.mlp(sp["mlp"], h)
+                return x, {"conv": nconv, "ssm": nssm, "attn_kv": kv}
+
+            x, kv_new = lax.scan(body, x, (params["blocks"], state.kv))
+
+            def tail_scan(x, inner):
+                p, conv, ssm_s = inner
+                y, nc, ns = one_mamba(x, p, conv, ssm_s)
+                return y, (nc, ns)
+
+            x, (tconv, tssm) = lax.scan(
+                tail_scan, x, (params["tail"], state.extra["conv"],
+                               state.extra["ssm"]))
+            return (ServeState(lengths + 1, kv_new,
+                               {"conv": tconv, "ssm": tssm}),
+                    _logits(cfg, params, x))
+
+        return step
+
+    if fam == "encdec":
+        kvc = _kv_cfg_dense(cfg, B, S)
+
+        def step(params, state: ServeState, tokens):
+            x = _embed_tokens(cfg, params, tokens)
+            lengths = state.lengths
+            cross = state.extra
+
+            def body(carry, xs):
+                x = carry
+                gp, kv, ck, cv = xs
+                h = rms_norm(x, gp["ln1"])
+                o, kv = _plane_attend(cfg, kvc, gp["self_attn"], h, kv,
+                                      lengths, "dense")
+                x = x + o
+                # cross attention against the (static) encoder memory
+                h = rms_norm(x, gp["lnx"])
+                q = dense(h, gp["cross_attn"]["wq"]).reshape(
+                    B, 1, cfg.n_heads, cfg.hd)
+                o = attn_lib.full_attention(q, ck, cv, causal=False)
+                o = dense(o.reshape(B, 1, cfg.n_heads * cfg.hd),
+                          gp["cross_attn"]["wo"])
+                x = x + o
+                h = rms_norm(x, gp["ln2"])
+                x = x + mlp_lib.mlp(gp["mlp"], h)
+                return x, kv
+
+            x, kv_new = lax.scan(
+                body, x, (params["dec_blocks"], state.kv,
+                          cross["k"], cross["v"]))
+            return (ServeState(lengths + 1, kv_new, cross),
+                    _logits(cfg, params, x))
+
+        return step
+
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# serve-state logical partition specs (mirrors init_decode_state)
+# --------------------------------------------------------------------------
+
+def _kv_state_pspecs(shard_batch: bool, layer_axes: int = 1,
+                     sparse_sharded: bool = False):
+    """Spec tree for a (stacked) KVPlaneState.  ``layer_axes`` leading None
+    axes are prepended (layer stacking); sparse mode adds a shard axis that
+    carries the dp sharding instead of the batch."""
+    lead = (None,) * layer_axes
+    if sparse_sharded:
+        lead = lead + (DP,)            # [L, D(shards), ...]
+        b = None
+    else:
+        b = DP if shard_batch else None
+    f = b if not sparse_sharded else None   # frames are batch-major in dense
+    # dense mode keeps a size-1 slab placeholder -> replicated
+    sl = None if not sparse_sharded else None
+    return kvplane.KVPlaneState(
+        k_frames=lead + (None, f, None, None),
+        v_frames=lead + (None, f, None, None),
+        page_table=lead + (b, None),
+        k_slab=lead + (None, sl, None, None),
+        v_slab=lead + (None, sl, None, None),
+        kmax=lead + (None, sl, None),
+        kmin=lead + (None, sl, None),
+        cat=lead + (b, None, None),
+        psf=lead + (b, None),
+        hot_hint=lead + (b, None, None),
+        page_rows=lead + (b, None),
+        frame_page=lead + (f,),
+        clock=lead + (f,),
+        step=lead,
+    )
+
+
+def _expert_state_pspecs():
+    lead = (None,)   # layer axis
+    return expertplane.ExpertPlaneState(
+        hot_wi=lead + (None, DP, None),
+        hot_wg=lead + (None, DP, None),
+        hot_wo=lead + (None, None, DP),
+        slot_of=lead + (None,),
+        expert_of=lead + (None,),
+        clock=lead + (None,),
+        access=lead + (None,),
+        step=lead,
+    )
+
+
+def serve_state_pspecs(cfg: ArchConfig, shape: ShapeConfig, shards: int = 1):
+    long = shape.kind == "decode_long"
+    B = shape.global_batch
+    shard_b = B > 1
+    fam = cfg.family
+    lengths = (DP,) if shard_b else (None,)
+    extra = ()
+
+    if fam == "ssm":
+        b = DP if shard_b else None
+        kv = {"mlstm_s": (None, b, None, None, None),
+              "mlstm_n": (None, b, None, None, None),
+              "slstm": ((None, b, None, None),) * 4}
+        return ServeState(lengths, kv, extra)
+
+    if fam == "hybrid":
+        b = DP if shard_b else None
+        if long:
+            akv = _kv_state_pspecs(False, layer_axes=1, sparse_sharded=True)
+        else:
+            akv = _kv_state_pspecs(shard_b, layer_axes=1)
+        kv = {"conv": (None, None, b, None, None),
+              "ssm": (None, None, b, None, None, None),
+              "attn_kv": akv}
+        tail = {"conv": (None, b, None, None),
+                "ssm": (None, b, None, None, None)}
+        return ServeState(lengths, kv, tail)
+
+    if fam == "encdec":
+        kv = _kv_state_pspecs(shard_b, layer_axes=1)
+        cross = {"k": (None, DP if shard_b else None, None, None, None),
+                 "v": (None, DP if shard_b else None, None, None, None)}
+        return ServeState(lengths, kv, cross)
+
+    if long and not cfg.sliding_window:
+        kv = _kv_state_pspecs(False, layer_axes=1, sparse_sharded=True)
+    else:
+        kv = _kv_state_pspecs(shard_b, layer_axes=1)
+    if cfg.atlas_experts and cfg.moe_experts:
+        extra = _expert_state_pspecs()
+    return ServeState(lengths, kv, extra)
+
+
+# --------------------------------------------------------------------------
+# step builders (train / prefill)
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt):
+    lf = loss(cfg)
+
+    def train_step(params, opt_state, step, batch):
+        lv, grads = jax.value_and_grad(lf)(params, batch)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, step + 1, lv, gnorm
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Prefill: full forward, emit last-token logits (continuation input)."""
+    if cfg.family == "encdec":
+        def step(params, batch):
+            enc_out = encdec_lib.encode(cfg, params, batch["frames"])
+            logits = encdec_lib.decode_train(cfg, params, batch["tokens"],
+                                             enc_out)
+            return logits[:, -1]
+        return step
+
+    def step(params, batch):
+        logits, _ = lm_lib.forward(cfg, params, batch["tokens"],
+                                   batch.get("patches"))
+        return logits[:, -1]
+    return step

@@ -1,0 +1,180 @@
+"""Attention: GQA/MQA with chunked (flash-style) causal training attention,
+sliding-window support, cross-attention, and cache-based decode."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import DP, TP, ParamDef, dense, rope
+
+NEG_INF = -1e30
+
+
+def attn_defs(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              dtype) -> dict:
+    return {
+        "wq": ParamDef((d_model, n_heads * head_dim), (DP, TP), dtype=dtype),
+        "wk": ParamDef((d_model, n_kv_heads * head_dim), (DP, TP), dtype=dtype),
+        "wv": ParamDef((d_model, n_kv_heads * head_dim), (DP, TP), dtype=dtype),
+        "wo": ParamDef((n_heads * head_dim, d_model), (TP, DP), dtype=dtype),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, KVH, Dh] -> [B, S, KVH*G, Dh] by head-group repetition."""
+    if groups == 1:
+        return k
+    b, s, kvh, dh = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, groups, dh))
+    return k.reshape(b, s, kvh * groups, dh)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: int = 0, chunk_q: int = 512,
+                      chunk_k: int = 512) -> jnp.ndarray:
+    """Flash-style attention with online softmax over KV chunks.
+
+    q: [B, Sq, H, Dh]; k/v: [B, Sk, KVH, Dh]  (H = KVH * G)
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (sliding-window attention).  ``q_offset`` is the absolute position of
+    q[0] relative to k[0] (for prefill continuation / cross-chunk decode).
+    Returns [B, Sq, H, Dh].
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    k = _repeat_kv(k, G)
+    v = _repeat_kv(v, G)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    while Sq % cq:
+        cq //= 2
+    while Sk % ck:
+        ck //= 2
+    nq, nk = Sq // cq, Sk // ck
+
+    q = q.reshape(B, nq, cq, H, Dh)
+
+    def q_chunk(qi, qc):
+        # qc: [B, cq, H, Dh]
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_chunk(ki, carry):
+            m, l, acc = carry
+            kc = lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+            k_pos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32),
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = alpha * acc + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                           vc.astype(jnp.float32))
+            return m_new, l, acc
+
+        m0 = jnp.full((B, H, cq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, Dh), jnp.float32)
+
+        # causal + window skipping: only scan kv chunks that can be visible
+        m, l, acc = lax.fori_loop(0, nk, kv_chunk, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(v.dtype)  # [B, cq, H, Dh]
+
+    out = lax.map(lambda args: q_chunk(*args),
+                  (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference unchunked attention (small shapes / tests)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    k = _repeat_kv(k, G)
+    v = _repeat_kv(v, G)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(Dh))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attend(params, x, positions, cfg, *, kv_override=None, causal=True,
+           window=0, q_offset=0, chunked=True):
+    """Standard attention block body (pre-norm handled by caller).
+
+    Returns (out [B, S, d_model], (k, v) as produced)."""
+    B, S, _ = x.shape
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(x, params["wq"]).reshape(B, S, H, Dh)
+    if kv_override is None:
+        k = dense(x, params["wk"]).reshape(B, S, KVH, Dh)
+        v = dense(x, params["wv"]).reshape(B, S, KVH, Dh)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = rope(q, positions, cfg.rope_theta)
+    fn = chunked_attention if chunked else full_attention
+    out = fn(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    out = dense(out.reshape(B, S, H * Dh), params["wo"])
+    return out, (k, v)
+
+
+def decode_attend(params, x, position, cache_k, cache_v, cfg, *, window=0):
+    """Single-token decode against a dense in-HBM cache.
+
+    x: [B, 1, d]; cache_k/v: [B, Smax, KVH, Dh]; position: [B] int32 (next
+    index to write).  Returns (out [B, 1, d], new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Smax = cache_k.shape[1]
+    q = dense(x, params["wq"]).reshape(B, 1, H, Dh)
+    k = dense(x, params["wk"]).reshape(B, 1, KVH, Dh)
+    v = dense(x, params["wv"]).reshape(B, 1, KVH, Dh)
+    q = rope(q, position[:, None], cfg.rope_theta)
+    k = rope(k, position[:, None], cfg.rope_theta)
+
+    # scatter the new kv at each sequence's position
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, position].set(k[:, 0])
+    cache_v = cache_v.at[bidx, position].set(v[:, 0])
+
+    G = H // KVH
+    kk = _repeat_kv(cache_k, G)
+    vv = _repeat_kv(cache_v, G)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(jnp.float32(Dh))
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] <= position[:, None]
+    if window > 0:
+        mask &= pos[None, :] > (position[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32)).astype(x.dtype)
+    out = dense(out.reshape(B, 1, H * Dh), params["wo"])
+    return out, cache_k, cache_v

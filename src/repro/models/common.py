@@ -1,0 +1,118 @@
+"""Lightweight functional module system + common layers.
+
+Parameters are plain nested dicts of arrays.  A model is defined as a
+pytree of :class:`ParamDef` (shape + initializer + logical partition spec);
+``init_params`` materializes arrays, ``pspecs`` extracts the sharding tree.
+
+Logical sharding axes used in specs (resolved against the mesh by
+``repro.launch.mesh.resolve``):
+  * ``"dp"`` — data/FSDP axis; maps to ``("pod", "data")`` on the multi-pod
+    mesh and ``("data",)`` on the single-pod mesh.
+  * ``"tp"`` — tensor-parallel axis; maps to ``"model"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+DP = "dp"
+TP = "tp"
+BATCH = "batch"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: tuple                      # logical partition spec (strings / None)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def initialize(self, key) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "normal":
+            fan_in = self.shape[0] if len(self.shape) == 1 else self.shape[-2]
+            std = self.scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, self.shape, jnp.float32) * std
+                    ).astype(self.dtype)
+        if self.init == "embed":
+            return (jax.random.normal(key, self.shape, jnp.float32)
+                    * self.scale).astype(self.dtype)
+        raise ValueError(self.init)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.initialize(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def shapes(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def)
+
+
+def pspecs(defs):
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_def)
+
+
+def stack_layers(defs, n: int):
+    """Prefix every ParamDef with a layer axis (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + tuple(d.spec),
+                           d.init, d.scale, d.dtype),
+        defs, is_leaf=is_def)
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """Rotary embedding.  x: [..., S, H, Dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                           # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [..., d_in] @ w [d_in, d_out].
+
+    The dot's output dtype matches the input: on TPU the MXU accumulates
+    in f32 internally either way, but a bf16 output means the *cross-shard*
+    partial-sum all-reduce GSPMD inserts for tensor parallelism moves bf16,
+    halving TP collective bytes (§Perf iteration 2)."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype).astype(x.dtype)
+
+
+def shard(x: jnp.ndarray, spec: tuple):
+    """Logical-axis sharding constraint (no-op outside a mesh context)."""
+    from repro.launch import mesh as mesh_lib
+    return mesh_lib.constrain(x, spec)

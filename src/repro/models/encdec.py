@@ -1,0 +1,131 @@
+"""Encoder-decoder LM (seamless-m4t family).
+
+The audio frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, d_model] which the encoder consumes
+directly.  Decoder = causal self-attention + cross-attention + MLP.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig
+from . import attention as attn
+from . import mlp as mlp_lib
+from .common import BATCH, DP, TP, ParamDef, dense, rms_norm, shard, stack_layers
+from .lm import pad_vocab
+
+
+def enc_block_defs(cfg: ArchConfig):
+    return {
+        "ln1": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "attn": attn.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.dtype),
+        "ln2": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "mlp": mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def dec_block_defs(cfg: ArchConfig):
+    return {
+        "ln1": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "self_attn": attn.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, cfg.dtype),
+        "lnx": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "cross_attn": attn.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.hd, cfg.dtype),
+        "ln2": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "mlp": mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    vp = pad_vocab(cfg.vocab)
+    return {
+        "embed": ParamDef((vp, cfg.d_model), (TP, DP), "embed", 0.02, cfg.dtype),
+        "enc_blocks": stack_layers(enc_block_defs(cfg), cfg.enc_layers),
+        "enc_ln": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "dec_blocks": stack_layers(dec_block_defs(cfg), cfg.dec_layers),
+        "final_ln": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "lm_head": ParamDef((cfg.d_model, vp), (DP, TP), dtype=cfg.dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: stub frame embeddings [B, S_enc, d_model] -> encoder output."""
+    B, S, _ = frames.shape
+    x = shard(frames.astype(cfg.dtype), (BATCH, None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, bp):
+        def fwd(x):
+            h = rms_norm(x, bp["ln1"])
+            o, _ = attn.attend(bp["attn"], h, positions, cfg, causal=False)
+            x = x + o
+            h = rms_norm(x, bp["ln2"])
+            return x + mlp_lib.mlp(bp["mlp"], h)
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+        return shard(fwd(x), (BATCH, None, None)), None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_ln"])
+
+
+def decode_train(cfg: ArchConfig, params, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder pass -> logits [B, S, vocab_padded]."""
+    B, S = tokens.shape
+    vp = pad_vocab(cfg.vocab)
+    one_hot = jax.nn.one_hot(tokens, vp, dtype=cfg.dtype)
+    x = jnp.einsum("bsv,vd->bsd", one_hot, params["embed"])
+    x = shard(x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype),
+              (BATCH, None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                               (B, enc_out.shape[1]))
+
+    def body(x, bp):
+        def fwd(x):
+            h = rms_norm(x, bp["ln1"])
+            o, _ = attn.attend(bp["self_attn"], h, positions, cfg)
+            x = x + o
+            h = rms_norm(x, bp["lnx"])
+            kvh = cfg.n_kv_heads
+            k = dense(enc_out, bp["cross_attn"]["wk"]).reshape(
+                B, -1, kvh, cfg.hd)
+            v = dense(enc_out, bp["cross_attn"]["wv"]).reshape(
+                B, -1, kvh, cfg.hd)
+            # no RoPE on cross-attention (position-agnostic memory keys)
+            o, _ = attn.attend(bp["cross_attn"], h, positions * 0, cfg,
+                               kv_override=(k, v), causal=False)
+            x = x + o
+            h = rms_norm(x, bp["ln2"])
+            return x + mlp_lib.mlp(bp["mlp"], h)
+        if cfg.remat:
+            fwd = jax.checkpoint(fwd,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+        return shard(fwd(x), (BATCH, None, None)), None
+
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_ln"])
+    return shard(dense(x, params["lm_head"]), (BATCH, None, TP)
+                 ).astype(jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    enc_out = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    vp = pad_vocab(cfg.vocab)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.einsum("bsv,bsv->bs", logits,
+                        jax.nn.one_hot(labels, vp, dtype=jnp.float32))
+    return ((lse - picked) * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,206 @@
+"""Unified decoder-only LM covering the dense / MoE / xLSTM / hybrid
+families, with scan-over-layers + remat, GSPMD-ready logical shardings,
+train / prefill / decode step bodies.
+
+Layer stacking: layers are grouped into a repeating *pattern group* (e.g.
+xLSTM: (mlstm, slstm); zamba2: 5x mamba2 + one shared-attention
+application).  Parameters for scanned groups carry a leading group axis;
+shared blocks (zamba2's attention) live outside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig
+from . import attention as attn
+from . import mlp as mlp_lib
+from . import ssm
+from .common import BATCH, DP, TP, ParamDef, dense, init_params, pspecs, \
+    rms_norm, shard, stack_layers
+
+
+def pad_vocab(vocab: int, multiple: int = 128) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+# --------------------------------------------------------------------------
+# block definitions per family
+# --------------------------------------------------------------------------
+
+def _attn_mlp_defs(cfg: ArchConfig):
+    d = {
+        "ln1": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        "attn": attn.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.dtype),
+        "ln2": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+    }
+    if cfg.moe_experts:
+        shard_ep = cfg.moe_experts % 16 == 0
+        d["moe"] = mlp_lib.moe_defs(cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                                    shard_ep, cfg.dtype)
+    else:
+        d["mlp"] = mlp_lib.mlp_defs(cfg.d_model, cfg.d_ff, cfg.dtype)
+    return d
+
+
+def group_defs(cfg: ArchConfig) -> tuple[dict, int, dict]:
+    """Returns (scanned_group_defs, n_groups, shared_defs)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _attn_mlp_defs(cfg), cfg.n_layers, {}
+    if fam == "ssm":          # xLSTM: alternating mLSTM / sLSTM
+        g = {
+            "mlstm": ssm.mlstm_defs(cfg.d_model, cfg.n_heads, cfg.dtype),
+            "slstm": ssm.slstm_defs(cfg.d_model, cfg.n_heads, cfg.dtype),
+        }
+        return g, cfg.n_layers // 2, {}
+    if fam == "hybrid":       # zamba2: 6 groups of (5 mamba2 + shared attn)
+        per_group = 5
+        n_groups = 6
+        g = {"mamba": stack_layers(
+            ssm.mamba2_defs(cfg.d_model, cfg.ssm_state, cfg.dtype), per_group)}
+        shared = {"shared_attn": _attn_mlp_defs(
+            dataclasses.replace(cfg, moe_experts=0)),
+            "tail": stack_layers(
+                ssm.mamba2_defs(cfg.d_model, cfg.ssm_state, cfg.dtype), 2)}
+        return g, n_groups, shared
+    raise ValueError(fam)
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    vp = pad_vocab(cfg.vocab)
+    g, n_groups, shared = group_defs(cfg)
+    defs = {
+        "embed": ParamDef((vp, cfg.d_model), (TP, DP), "embed", 0.02,
+                          cfg.dtype),
+        "blocks": stack_layers(g, n_groups),
+        "final_ln": ParamDef((cfg.d_model,), (None,), "ones", dtype=cfg.dtype),
+        **shared,
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, vp), (DP, TP), dtype=cfg.dtype)
+    if cfg.frontend == "vision":
+        defs["patch_proj"] = ParamDef((cfg.frontend_dim, cfg.d_model),
+                                      (None, DP), dtype=cfg.dtype)
+    return defs
+
+
+# --------------------------------------------------------------------------
+# forward pass (train / prefill)
+# --------------------------------------------------------------------------
+
+class Aux(NamedTuple):
+    moe_loss: jnp.ndarray
+
+
+def _group_fwd(cfg: ArchConfig, shared_params, gi, gparams, x, positions):
+    """One scanned group; returns new x and aux."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "moe", "vlm"):
+        h = rms_norm(x, gparams["ln1"])
+        o, _ = attn.attend(gparams["attn"], h, positions, cfg,
+                           window=cfg.sliding_window)
+        x = x + o
+        h = rms_norm(x, gparams["ln2"])
+        if cfg.moe_experts:
+            o, aux = mlp_lib.moe(gparams["moe"], h, n_experts=cfg.moe_experts,
+                                 topk=cfg.moe_topk,
+                                 capacity_factor=cfg.moe_capacity)
+        else:
+            o = mlp_lib.mlp(gparams["mlp"], h)
+        x = x + o
+    elif fam == "ssm":
+        x, _ = ssm.mlstm_block(gparams["mlstm"], x, cfg)
+        x, _ = ssm.slstm_block(gparams["slstm"], x, cfg)
+    elif fam == "hybrid":
+        def one_mamba(x, p):
+            y, _ = ssm.mamba2_block(p, x, cfg)
+            return y, None
+        x, _ = lax.scan(one_mamba, x, gparams["mamba"])
+        sp = shared_params["shared_attn"]
+        h = rms_norm(x, sp["ln1"])
+        o, _ = attn.attend(sp["attn"], h, positions, cfg)
+        x = x + o
+        h = rms_norm(x, sp["ln2"])
+        x = x + mlp_lib.mlp(sp["mlp"], h)
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def forward(cfg: ArchConfig, params, tokens: jnp.ndarray,
+            patches: Optional[jnp.ndarray] = None):
+    """tokens [B, S] -> (logits [B, S, vocab_padded], Aux).
+
+    For the vision family, ``patches`` [B, Np, frontend_dim] are projected
+    and prepended as a prefix (logits for the prefix are produced but the
+    loss masks them out)."""
+    B, S = tokens.shape
+    vp = pad_vocab(cfg.vocab)
+    embed = params["embed"]
+
+    one_hot = jax.nn.one_hot(tokens, vp, dtype=embed.dtype)
+    x = jnp.einsum("bsv,vd->bsd", one_hot, embed)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    # keep activations batch-sharded over dp (GSPMD otherwise replicates
+    # the batch through the layer scan -> 16x collective blowup; §Perf it.1)
+    x = shard(x, (BATCH, None, None))
+
+    if cfg.frontend == "vision" and patches is not None:
+        pre = dense(patches.astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([pre, x], axis=1)
+    St = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+
+    def body(carry, gparams):
+        x, aux, gi = carry
+        fwd = lambda x: _group_fwd(cfg, params, gi, gparams, x, positions)
+        if cfg.remat:
+            fwd = jax.checkpoint(
+                fwd, policy=jax.checkpoint_policies.nothing_saveable)
+        x, a = fwd(x)
+        x = shard(x, (BATCH, None, None))
+        return (x, aux + a, gi + 1), None
+
+    (x, aux, _), _ = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        params["blocks"])
+
+    if cfg.family == "hybrid":   # zamba2 tail layers
+        def one_mamba(x, p):
+            y, _ = ssm.mamba2_block(p, x, cfg)
+            return y, None
+        x, _ = lax.scan(one_mamba, x, params["tail"])
+
+    x = rms_norm(x, params["final_ln"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, embed)
+    else:
+        logits = dense(x, params["lm_head"])
+    logits = shard(logits, (BATCH, None, TP))
+    if cfg.frontend == "vision" and patches is not None:
+        logits = logits[:, -S:]
+    return logits.astype(jnp.float32), Aux(aux)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(cfg, params, tokens, batch.get("patches"))
+    vp = pad_vocab(cfg.vocab)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    one_hot = jax.nn.one_hot(labels, vp, dtype=jnp.float32)
+    picked = jnp.einsum("bsv,bsv->bs", logits, one_hot)
+    nll = (lse - picked) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux.moe_loss

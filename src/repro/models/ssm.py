@@ -1,0 +1,260 @@
+"""Recurrent sequence mixers: a shared chunked gated linear recurrence
+(Mamba2 SSD and xLSTM's mLSTM are both instances), plus the sequential
+sLSTM cell.
+
+The recurrence is  S_t = a_t * S_{t-1} + k_t v_t^T,   y_t = q_t @ S_t
+with per-(step, head) scalar decay ``a_t = exp(log_a_t)``.  Training uses a
+chunkwise-parallel form (intra-chunk attention-like matmuls + inter-chunk
+state passing); decode is the O(1) recurrent update.
+
+Deviations from the papers (documented in DESIGN.md): the mLSTM input gate
+uses a capped exponential + normalizer instead of the running-max
+stabilizer (numerically safe, same structure); Zamba2's shared block
+consumes the hidden state only (no embedding concat / LoRA adapters).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import DP, TP, ParamDef, dense, rms_norm
+
+
+# --------------------------------------------------------------------------
+# chunked gated linear recurrence
+# --------------------------------------------------------------------------
+
+def chunked_linear_rnn(q, k, v, log_a, s0=None, *, chunk: int = 128):
+    """q,k: [B, S, H, dk]; v: [B, S, H, dv]; log_a: [B, S, H] (<= 0).
+    Returns (y [B, S, H, dv], s_final [B, H, dk, dv])."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    n = S // L
+
+    qc = q.reshape(B, n, L, H, dk).transpose(1, 0, 3, 2, 4)   # [n,B,H,L,dk]
+    kc = k.reshape(B, n, L, H, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, L, H, dv).transpose(1, 0, 3, 2, 4)
+    ac = log_a.reshape(B, n, L, H).transpose(1, 0, 3, 2)      # [n,B,H,L]
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def chunk_step(s, inputs):
+        qi, ki, vi, lai = inputs                               # [B,H,L,*]
+        lai = lai.astype(jnp.float32)
+        A = jnp.cumsum(lai, axis=-1)                           # [B,H,L]
+        # intra-chunk: y_i += sum_{j<=i} exp(A_i - A_j) (q_i.k_j) v_j
+        qf = qi.astype(jnp.float32)
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        scores = jnp.einsum("bhid,bhjd->bhij", qf, kf)
+        decay = A[..., :, None] - A[..., None, :]              # [B,H,L,L]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal, jnp.exp(decay), 0.0)
+        y = jnp.einsum("bhij,bhjd->bhid", scores * w, vf)
+        # inter-chunk: y_i += exp(A_i) q_i @ s_in
+        y += jnp.exp(A)[..., None] * jnp.einsum("bhid,bhdv->bhiv", qf, s)
+        # state update: s_out = exp(A_L) s + sum_j exp(A_L - A_j) k_j v_j^T
+        tail = jnp.exp(A[..., -1:] - A)                        # [B,H,L]
+        s = jnp.exp(A[..., -1])[..., None, None] * s + jnp.einsum(
+            "bhjd,bhjv->bhdv", kf * tail[..., None], vf)
+        return s, y
+
+    s_final, ys = lax.scan(chunk_step, s0, (qc, kc, vc, ac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    return y.astype(v.dtype), s_final
+
+
+def linear_rnn_step(q, k, v, log_a, s):
+    """Single-token recurrence.  q,k: [B, H, dk]; v: [B, H, dv];
+    log_a: [B, H]; s: [B, H, dk, dv] -> (y [B, H, dv], s')."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    s = a * s + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                           v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), s)
+    return y.astype(v.dtype), s
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block (SSD)
+# --------------------------------------------------------------------------
+
+def mamba2_defs(d_model: int, ssm_state: int, dtype, *, expand: int = 2,
+                head_dim: int = 64, conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    return {
+        "norm": ParamDef((d_model,), (None,), "ones", dtype=dtype),
+        "in_proj": ParamDef((d_model, 2 * d_inner + 2 * ssm_state + H),
+                            (DP, TP), dtype=dtype),
+        "conv": ParamDef((conv_width, d_inner + 2 * ssm_state), (None, TP),
+                         "normal", dtype=dtype),
+        "A_log": ParamDef((H,), (None,), "zeros", dtype=jnp.float32),
+        "D": ParamDef((H,), (None,), "ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), (None,), "zeros", dtype=jnp.float32),
+        "out_norm": ParamDef((d_inner,), (None,), "ones", dtype=dtype),
+        "out_proj": ParamDef((d_inner, d_model), (TP, DP), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [W, C].
+    state: [B, W-1, C] carried inputs for decode; returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_block(params, x, cfg, state=None, *, chunk: int = 128):
+    """x: [B, S, d_model].  state: optional (conv_state, ssm_state) for
+    decode continuation.  Returns (y, new_state)."""
+    B, S, d = x.shape
+    N = cfg.ssm_state
+    d_inner = 2 * d
+    head_dim = 64
+    H = d_inner // head_dim
+
+    h = rms_norm(x, params["norm"])
+    proj = dense(h, params["in_proj"])
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    conv_state = None if state is None else state[0]
+    xbc, new_conv = _causal_conv(xbc, params["conv"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                     # [H] < 0
+    log_a = dt * A                                                    # [B,S,H]
+
+    xh = xs.reshape(B, S, H, head_dim)
+    v = xh * dt[..., None].astype(x.dtype)
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, S, H, N))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, S, H, N))
+
+    s0 = None if state is None else state[1]
+    y, s_final = chunked_linear_rnn(q, k, v, log_a, s0, chunk=chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["out_norm"])
+    return x + dense(y, params["out_proj"]), (new_conv, s_final)
+
+
+# --------------------------------------------------------------------------
+# xLSTM blocks
+# --------------------------------------------------------------------------
+
+def mlstm_defs(d_model: int, n_heads: int, dtype, *, expand: int = 2) -> dict:
+    d_inner = expand * d_model
+    return {
+        "norm": ParamDef((d_model,), (None,), "ones", dtype=dtype),
+        "up_proj": ParamDef((d_model, 2 * d_inner), (DP, TP), dtype=dtype),
+        "wq": ParamDef((d_inner, d_inner), (DP, TP), dtype=dtype),
+        "wk": ParamDef((d_inner, d_inner), (DP, TP), dtype=dtype),
+        "wv": ParamDef((d_inner, d_inner), (DP, TP), dtype=dtype),
+        "wif": ParamDef((d_inner, 2 * n_heads), (DP, None), dtype=dtype),
+        "out_norm": ParamDef((d_inner,), (None,), "ones", dtype=dtype),
+        "down_proj": ParamDef((d_inner, d_model), (TP, DP), dtype=dtype),
+    }
+
+
+def mlstm_block(params, x, cfg, state=None, *, chunk: int = 128):
+    """xLSTM mLSTM block (matrix memory, exp input gating + normalizer)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    d_inner = 2 * d
+    dh = d_inner // H
+
+    h = rms_norm(x, params["norm"])
+    up = dense(h, params["up_proj"])
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    q = dense(xm, params["wq"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    k = dense(xm, params["wk"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = dense(xm, params["wv"]).reshape(B, S, H, dh)
+    gates = dense(xm, params["wif"]).astype(jnp.float32)
+    i_gate = jnp.exp(jnp.minimum(gates[..., :H], 4.0))       # capped exp
+    log_f = jax.nn.log_sigmoid(gates[..., H:])               # [B,S,H]
+
+    ki = k * i_gate[..., None].astype(k.dtype)
+    s0 = None if state is None else state[0]
+    n0 = None if state is None else state[1]
+    y, s_final = chunked_linear_rnn(q, ki, v, log_f, s0, chunk=chunk)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    nrm, n_final = chunked_linear_rnn(q, ki, ones, log_f, n0, chunk=chunk)
+    y = y.astype(jnp.float32) / jnp.maximum(jnp.abs(nrm.astype(jnp.float32)), 1.0)
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["out_norm"])
+    return x + dense(y, params["down_proj"]), (s_final, n_final)
+
+
+def slstm_defs(d_model: int, n_heads: int, dtype, *, pf: float = 4 / 3) -> dict:
+    dh = d_model // n_heads
+    # round the GeGLU hidden to a TP-friendly multiple (sharding divisibility)
+    d_ff = -(-int(pf * d_model) // 64) * 64
+    return {
+        "norm": ParamDef((d_model,), (None,), "ones", dtype=dtype),
+        "wx": ParamDef((d_model, 4 * d_model), (DP, None), dtype=dtype),
+        "r": ParamDef((n_heads, dh, 4 * dh), (None, None, None), dtype=dtype,
+                      scale=0.5),
+        "ff_norm": ParamDef((d_model,), (None,), "ones", dtype=dtype),
+        "ff_in": ParamDef((d_model, 2 * d_ff), (DP, TP), dtype=dtype),
+        "ff_out": ParamDef((d_ff, d_model), (TP, DP), dtype=dtype),
+    }
+
+
+def slstm_block(params, x, cfg, state=None):
+    """xLSTM sLSTM block: sequential scalar-memory recurrence (not
+    parallelizable — the paper says so) + GeGLU feed-forward."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+
+    h = rms_norm(x, params["norm"])
+    wx = dense(h, params["wx"])                 # [B, S, 4d]
+
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = (zeros, zeros, jnp.zeros((B, H, dh), jnp.float32) - 10.0,
+                 jnp.zeros((B, H, dh), jnp.float32))
+    c0, n0, m0, h0 = state
+
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, m, hprev = carry                          # [B, H, dh]
+        rec = jnp.einsum("bhd,hdk->bhk", hprev, r)      # [B, H, 4dh]
+        gx = wx_t.astype(jnp.float32).reshape(B, H, 4 * dh) + rec
+        zt, it, ft, ot = jnp.split(gx, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        hnew = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, hnew), hnew
+
+    (c, n, m, hl), ys = lax.scan(step, (c0, n0, m0, h0),
+                                 wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    x = x + y
+    # GeGLU FF
+    hf = rms_norm(x, params["ff_norm"])
+    a, b = jnp.split(dense(hf, params["ff_in"]), 2, axis=-1)
+    ff = jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype) * b
+    return x + dense(ff, params["ff_out"]), (c, n, m, hl)

@@ -1,0 +1,43 @@
+"""Gradient accumulation (microbatching): train with a global batch larger
+than fits activation memory by scanning micro-steps and averaging grads.
+Works with any loss fn; the batch's leading dim is split into
+``num_micro`` chunks inside the jitted step (single optimizer update)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def accumulated_value_and_grad(loss_fn, num_micro: int):
+    """Returns fn(params, batch) -> (mean_loss, grads) evaluating the loss
+    in ``num_micro`` sequential microbatches."""
+    if num_micro <= 1:
+        return jax.value_and_grad(loss_fn)
+
+    vg = jax.value_and_grad(loss_fn)
+
+    def split(batch):
+        def per(x):
+            b = x.shape[0]
+            assert b % num_micro == 0, (b, num_micro)
+            return x.reshape((num_micro, b // num_micro) + x.shape[1:])
+        return jax.tree.map(per, batch)
+
+    def fn(params, batch):
+        micro = split(batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            l, g = vg(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), grad_acc, g)
+            return (loss_acc + l, grad_acc), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = lax.scan(body, (jnp.zeros(()), zero), micro)
+        inv = 1.0 / num_micro
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    return fn

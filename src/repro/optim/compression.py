@@ -1,0 +1,52 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Int8 error-feedback quantization: before the (slow, cross-pod) all-reduce,
+gradients are quantized to int8 with a per-tensor scale; the quantization
+residual is fed back into the next step's gradient (error feedback keeps
+SGD convergence).  Cross-pod traffic drops 4x (f32) / 2x (bf16).
+
+Used by the trainer when the mesh has a "pod" axis; the dry-run cost model
+credits the reduced wire bytes (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: jnp.ndarray
+
+
+def init_ef(params):
+    return jax.tree.map(
+        lambda p: EFState(jnp.zeros(p.shape, jnp.float32)), params)
+
+
+def quantize(g: jnp.ndarray, residual: jnp.ndarray):
+    """Returns (q int8, scale, new_residual)."""
+    g = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g - deq
+
+
+def compress_tree(grads, ef_state):
+    """Quantize every leaf with error feedback; returns (q_tree, scales,
+    new_ef)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    qs, scales, res = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, r = quantize(g, e.residual)
+        qs.append(q); scales.append(s); res.append(EFState(r))
+    return (tdef.unflatten(qs), tdef.unflatten(scales),
+            tdef.unflatten(res))
+
+
+def decompress_tree(q_tree, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scales)

@@ -1,0 +1,147 @@
+"""Optimizers: AdamW and Adafactor (factored second moments, for
+trillion-parameter configs), with global-norm clipping and schedules.
+
+Implemented natively (no optax dependency) as pure pytree transforms:
+``init(params) -> state``; ``update(grads, state, params, step) ->
+(new_params, new_state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable = cosine_schedule(3e-4, 100, 10000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(self, grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, self.clip)
+        t = (step + 1).astype(jnp.float32)
+        lr = self.lr(step)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = self.b1 * mu + (1 - self.b1) * g
+            nu = self.b2 * nu + (1 - self.b2) * g * g
+            step_ = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            newp = (p.astype(jnp.float32)
+                    - lr * (step_ + self.weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), mu, nu
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p
+               in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                     "nu": tdef.unflatten([o[2] for o in out])}
+        return new_p, new_state, gnorm
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored 2nd moments — the trillion-parameter option)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable = cosine_schedule(1e-3, 100, 10000)
+    decay: float = 0.8      # beta2 exponent: 1 - t^-decay
+    eps: float = 1e-30
+    clip: float = 1.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params):
+        def per(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(per, params)}
+
+    def update(self, grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, self.clip)
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self.lr(step)
+
+        def upd(g, fac, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if self._factored(p.shape):
+                vr = beta2 * fac["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * fac["vc"] + (1 - beta2) * g2.mean(-2)
+                rms = (vr[..., :, None] * vc[..., None, :]
+                       / jnp.maximum(vr.mean(-1)[..., None, None], self.eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(rms, self.eps))
+                newfac = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * fac["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+                newfac = {"v": v}
+            # update clipping (Adafactor's d=1.0 RMS rule)
+            u = u / jnp.maximum(1.0, jnp.sqrt(jnp.mean(u * u)))
+            newp = p.astype(jnp.float32) - lr * u
+            return newp.astype(p.dtype), newfac
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"f": tdef.unflatten([o[1] for o in out])}, gnorm)
+
+
+def get_optimizer(name: str, **kw):
+    return {"adamw": AdamW, "adafactor": Adafactor}[name](**kw)

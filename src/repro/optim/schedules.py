@@ -1,0 +1,14 @@
+"""LR schedules (cosine with warmup re-exported + linear/const)."""
+from .optimizers import cosine_schedule  # noqa: F401
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(base_lr: float, warmup: int):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        return base_lr * jnp.minimum(1.0, s / max(warmup, 1))
+    return lr

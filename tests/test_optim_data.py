@@ -1,0 +1,82 @@
+"""Optimizers, grad accumulation, compression, synthetic data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DataConfig, batch_for_step
+from repro.optim import (Adafactor, AdamW, accumulated_value_and_grad,
+                         compression, get_optimizer)
+
+
+def _descends(opt):
+    w = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = opt.init(w)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for step in range(60):
+        g = jax.grad(loss)(w)
+        w, state, _ = opt.update(g, state, w, jnp.asarray(step))
+    return float(loss(w))
+
+
+def test_adamw_descends():
+    assert _descends(AdamW(lr=lambda s: 0.1)) < 1e-2
+
+
+def test_adafactor_descends():
+    assert _descends(Adafactor(lr=lambda s: 0.1)) < 1e-1
+
+
+def test_grad_accumulation_matches_full_batch():
+    w = {"w": jnp.ones((4, 3))}
+    batch = jnp.asarray(np.random.RandomState(0).randn(8, 4), jnp.float32)
+
+    def loss(p, b):
+        return jnp.mean((b @ p["w"]) ** 2)
+
+    l1, g1 = jax.value_and_grad(loss)(w, batch)
+    l2, g2 = accumulated_value_and_grad(loss, 4)(w, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               rtol=1e-5)
+
+
+def test_compression_error_feedback_converges():
+    g = jnp.asarray(np.random.RandomState(1).randn(64) * 0.1, jnp.float32)
+    ef = compression.EFState(jnp.zeros(64))
+    acc_true = np.zeros(64)
+    acc_deq = np.zeros(64)
+    for _ in range(50):
+        q, s, r = compression.quantize(g, ef.residual)
+        ef = compression.EFState(r)
+        acc_true += np.asarray(g)
+        acc_deq += np.asarray(q, np.float32) * float(s)
+    # error feedback: accumulated dequantized grads track the true sum
+    np.testing.assert_allclose(acc_deq, acc_true, atol=0.05)
+
+
+def test_data_step_indexed_determinism():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=4)
+    a = batch_for_step(cfg, 17)
+    b = batch_for_step(cfg, 17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_for_step(cfg, 18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < 1000 and a["tokens"].min() >= 0
+    assert np.all(a["labels"][:, -1] == -1)
+
+
+def test_prefetcher_matches_direct_and_survives_seek():
+    from repro.data.pipeline import Prefetcher
+    from repro.data.synthetic import DataConfig, batch_for_step
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+    fn = lambda s: batch_for_step(cfg, s)
+    pf = Prefetcher(fn, start_step=0, depth=2)
+    try:
+        for s in range(5):
+            got = pf.get(expect_step=s)
+            np.testing.assert_array_equal(got["tokens"], fn(s)["tokens"])
+        # seek (restart at a different step): deterministic rebuild
+        got = pf.get(expect_step=42)
+        np.testing.assert_array_equal(got["tokens"], fn(42)["tokens"])
+    finally:
+        pf.close()

@@ -1,0 +1,150 @@
+"""Unit tests for the hybrid data plane (core contribution)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from functools import partial
+
+from repro.core import (FREE, LOCAL, REMOTE, PlaneConfig, access, create,
+                        evacuate, evict_all, paging_fraction, peek, update,
+                        writeback_all, check_invariants)
+from repro.core import paths, sync
+
+
+def mk(num_objs=96, obj_dim=4, page_objs=8, num_frames=6, num_vpages=40, **kw):
+    cfg = PlaneConfig(num_objs=num_objs, obj_dim=obj_dim, page_objs=page_objs,
+                      num_frames=num_frames, num_vpages=num_vpages, **kw)
+    data = jnp.arange(num_objs * obj_dim, dtype=jnp.float32
+                      ).reshape(num_objs, obj_dim)
+    return cfg, data, create(cfg, data)
+
+
+def test_create_layout():
+    cfg, data, s = mk()
+    assert int((s.backing == REMOTE).sum()) == cfg.data_pages
+    assert int((s.backing == FREE).sum()) == cfg.num_vpages - cfg.data_pages
+    np.testing.assert_allclose(np.asarray(peek(cfg, s, jnp.arange(96))),
+                               np.asarray(data))
+    assert all(check_invariants(cfg, s).values())
+
+
+def test_sequential_access_takes_paging():
+    cfg, data, s = mk()
+    acc = jax.jit(partial(access, cfg))
+    s, rows = acc(s, jnp.arange(16, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(data[:16]))
+    assert int(s.stats.page_ins) == 2           # 2 pages of 8 objects
+    assert int(s.stats.obj_ins) == 0
+    assert int(s.stats.hits) == 14
+
+
+def test_random_access_flips_to_runtime():
+    cfg, data, s = mk()
+    acc = jax.jit(partial(access, cfg))
+    rng = np.random.RandomState(0)
+    for _ in range(10):
+        ids = jnp.asarray(rng.choice(96, 12, replace=False), jnp.int32)
+        s, rows = acc(s, ids)
+        np.testing.assert_allclose(np.asarray(rows), np.asarray(data[ids]))
+    assert int(s.stats.psf_to_runtime) > 0      # PSF flipped under low CAR
+    assert int(s.stats.obj_ins) > 0             # runtime path engaged
+    assert all(check_invariants(cfg, s).values())
+
+
+def test_psf_only_changes_at_pageout():
+    """Invariant #1: PSF of a page never changes while it is resident."""
+    cfg, data, s = mk()
+    acc = jax.jit(partial(access, cfg))
+    rng = np.random.RandomState(1)
+    for _ in range(6):
+        before_psf = np.asarray(s.psf)
+        before_backing = np.asarray(s.backing)
+        ids = jnp.asarray(rng.choice(96, 10, replace=False), jnp.int32)
+        s, _ = acc(s, ids)
+        after_psf = np.asarray(s.psf)
+        after_backing = np.asarray(s.backing)
+        # pages that stayed LOCAL throughout must keep their PSF
+        stayed = (before_backing == LOCAL) & (after_backing == LOCAL)
+        assert np.all(after_psf[stayed] == before_psf[stayed])
+
+
+def test_update_dirty_writeback():
+    cfg, data, s = mk()
+    ids = jnp.asarray([5, 40, 80], jnp.int32)
+    rows = -jnp.ones((3, 4), jnp.float32)
+    s = jax.jit(partial(update, cfg))(s, ids, rows)
+    s = jax.jit(partial(writeback_all, cfg))(s)
+    s = jax.jit(partial(evict_all, cfg))(s)
+    np.testing.assert_allclose(np.asarray(peek(cfg, s, ids)), np.asarray(rows))
+    assert all(check_invariants(cfg, s).values())
+
+
+def test_evacuation_compacts_and_segregates():
+    cfg, data, s = mk(num_frames=8)
+    acc = jax.jit(partial(access, cfg))
+    rng = np.random.RandomState(2)
+    # object-path churn creates garbage on source pages
+    for _ in range(20):
+        ids = jnp.asarray(rng.choice(96, 12), jnp.int32)
+        s, _ = acc(s, ids)
+    pre_moved = int(s.stats.evac_moved)
+    s2 = jax.jit(partial(evacuate, cfg, garbage_threshold=0.05))(s)
+    assert all(check_invariants(cfg, s2).values())
+    # data is preserved through compaction
+    np.testing.assert_allclose(
+        np.asarray(peek(cfg, s2, jnp.arange(96))), np.asarray(data))
+    # access bits cleared at end of evacuation (paper §4.3)
+    assert not bool(s2.access.any())
+
+
+def test_pinned_pages_never_evicted():
+    """Invariant #2: a pinned page survives eviction pressure."""
+    cfg, data, s = mk(num_frames=4)
+    acc = jax.jit(partial(access, cfg))
+    s, _ = acc(s, jnp.arange(8, dtype=jnp.int32))      # page 0 resident
+    v0 = int(s.obj_loc[0]) // cfg.page_objs
+    s = sync.pin_objects(cfg, s, jnp.asarray([0], jnp.int32))
+    # hammer other pages to force evictions
+    for start in range(8, 96, 8):
+        s, _ = acc(s, jnp.arange(start, start + 8, dtype=jnp.int32))
+    assert int(s.backing[v0]) == LOCAL
+    s = sync.unpin_objects(cfg, s, jnp.asarray([0], jnp.int32))
+    assert int(s.pin[v0]) == 0
+
+
+def test_livelock_guard_forces_paging():
+    cfg, data, s = mk(num_frames=4)
+    acc = jax.jit(partial(access, cfg))
+    s, _ = acc(s, jnp.arange(24, dtype=jnp.int32))
+    ids = jnp.arange(8, dtype=jnp.int32)
+    s = sync.pin_objects(cfg, s, ids)
+    s2 = sync.force_paging_under_pressure(cfg, s, threshold=0.0)
+    v = np.asarray(s2.obj_loc[ids]) // cfg.page_objs
+    assert np.all(np.asarray(s2.psf)[v])
+    s2 = sync.unpin_objects(cfg, s2, ids)
+    assert all(check_invariants(cfg, s2).values())
+
+
+def test_car_threshold_behavior():
+    """High CAR -> paging; low CAR -> runtime (paper Fig 10 mechanism)."""
+    cfg, data, s = mk(car_threshold=0.8)
+    acc = jax.jit(partial(access, cfg))
+    # touch every object on page 1 (full CAR), single object on page 5
+    s, _ = acc(s, jnp.arange(8, 16, dtype=jnp.int32))
+    s, _ = acc(s, jnp.asarray([40], jnp.int32))
+    s = jax.jit(partial(evict_all, cfg))(s)
+    assert bool(s.psf[1])          # CAR = 1.0 -> paging
+    assert not bool(s.psf[5])      # CAR = 1/8 -> runtime
+
+
+def test_offload_remote_apply():
+    from repro.core import offload
+    cfg, data, s = mk()
+    vpages = jnp.asarray([0, 3, 7], jnp.int32)
+    s, sums = offload.remote_apply(cfg, s, vpages,
+                                   lambda page: page.sum())
+    expect = [float(data[v * 8:(v + 1) * 8].sum()) for v in [0, 3, 7]]
+    np.testing.assert_allclose(np.asarray(sums), expect, rtol=1e-6)
+    assert np.all(np.asarray(s.pin[vpages]) == 1)   # offload-busy pins
+    s = offload.remote_release(cfg, s, vpages)
+    assert all(check_invariants(cfg, s).values())

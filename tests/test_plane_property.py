@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis): the plane's invariants hold under
+arbitrary access/update/evacuate interleavings, and reads always return
+ground truth."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PlaneConfig, access, baselines, check_invariants,
+                        create, evacuate, evict_all, peek, update,
+                        writeback_all)
+
+CFG = PlaneConfig(num_objs=48, obj_dim=4, page_objs=4, num_frames=5,
+                  num_vpages=36)
+DATA = jnp.arange(48 * 4, dtype=jnp.float32).reshape(48, 4)
+
+_ACC = jax.jit(partial(access, CFG))
+_UPD = jax.jit(partial(update, CFG))
+_EVA = jax.jit(partial(evacuate, CFG, garbage_threshold=0.2))
+_EVI = jax.jit(partial(evict_all, CFG))
+_OBJ = jax.jit(partial(baselines.object_access, CFG))
+_PAG = jax.jit(partial(baselines.paging_access, CFG))
+
+op_st = st.tuples(
+    st.sampled_from(["access", "update", "evacuate", "evict_all"]),
+    st.lists(st.integers(0, 47), min_size=1, max_size=6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(op_st, min_size=1, max_size=12), st.integers(0, 2 ** 31 - 1))
+def test_hybrid_plane_interleavings(ops, seed):
+    s = create(CFG, DATA)
+    shadow = np.asarray(DATA).copy()
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    for kind, ids in ops:
+        ids = jnp.asarray(ids, jnp.int32)
+        if kind == "access":
+            s, rows = _ACC(s, ids)
+            np.testing.assert_allclose(np.asarray(rows), shadow[np.asarray(ids)],
+                                       err_msg=f"read mismatch {ids}")
+        elif kind == "update":
+            rows = rng.randn(len(ids), 4).astype(np.float32)
+            # duplicate ids in one batch: last-writer-wins per the loop order
+            s = _UPD(s, ids, jnp.asarray(rows))
+            for i, o in enumerate(np.asarray(ids)):
+                shadow[o] = rows[i]
+        elif kind == "evacuate":
+            s = _EVA(s)
+        else:
+            s = _EVI(s)
+    inv = check_invariants(CFG, s)
+    assert all(inv.values()), inv
+    np.testing.assert_allclose(
+        np.asarray(peek(CFG, s, jnp.arange(48))), shadow)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 47), min_size=1, max_size=8),
+                min_size=1, max_size=8))
+def test_object_plane_reads_correct(batches):
+    s = create(CFG, DATA)
+    for ids in batches:
+        s, rows = _OBJ(s, jnp.asarray(ids, jnp.int32))
+        np.testing.assert_allclose(np.asarray(rows),
+                                   np.asarray(DATA)[np.asarray(ids)])
+    inv = check_invariants(CFG, s)
+    assert all(inv.values()), inv
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 47), min_size=1, max_size=8),
+                min_size=1, max_size=8))
+def test_paging_plane_reads_correct(batches):
+    s = create(CFG, DATA)
+    for ids in batches:
+        s, rows = _PAG(s, jnp.asarray(ids, jnp.int32))
+        np.testing.assert_allclose(np.asarray(rows),
+                                   np.asarray(DATA)[np.asarray(ids)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 47), min_size=1, max_size=10))
+def test_car_bounded(ids):
+    from repro.core.paths import car_of
+    s = create(CFG, DATA)
+    s, _ = _ACC(s, jnp.asarray(ids, jnp.int32))
+    for v in range(CFG.num_vpages):
+        car = float(car_of(CFG, s, jnp.asarray(v)))
+        assert 0.0 <= car <= 1.0
