@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs reduced
 sweeps (used by CI); the full run reproduces every figure's data.
+``--json PATH`` additionally writes all rows (plus total wall time per
+figure) to a JSON file — CI uploads these as ``BENCH_*.json`` artifacts.
 """
 import argparse
+import json
 import sys
 import time
 
@@ -13,6 +16,8 @@ def main() -> None:
     p.add_argument("--quick", action="store_true")
     p.add_argument("--only", default="",
                    help="comma-separated figure names (fig4,fig56,...)")
+    p.add_argument("--json", default="",
+                   help="write results to this JSON file (CI artifact)")
     args = p.parse_args()
 
     from benchmarks import (fig1c_eviction, fig4_throughput, fig56_latency,
@@ -30,17 +35,28 @@ def main() -> None:
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None
+    record = {"quick": args.quick, "figures": {}}
     print("name,us_per_call,derived")
     for name, fn in figures.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            fn(quick=args.quick)
+            rows = fn(quick=args.quick)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
             raise
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        wall = time.time() - t0
+        record["figures"][name] = {
+            "wall_s": round(wall, 2),
+            "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                     for r in (rows or [])],
+        }
+        print(f"# {name} done in {wall:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

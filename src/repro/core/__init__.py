@@ -4,6 +4,7 @@ Public surface:
 
 * :mod:`repro.core.layout`    — PlaneConfig + address layout constants
 * :mod:`repro.core.state`     — PlaneState pytree, ``create``
+* :mod:`repro.core.batch`     — plan-then-execute batch ingress engine
 * :mod:`repro.core.plane`     — hybrid ``access``/``update``/``evacuate``
 * :mod:`repro.core.baselines` — Fastswap/AIFM-analogue planes
 * :mod:`repro.core.sync`      — deref-count (pin) protocol, live-lock guard
@@ -15,9 +16,11 @@ from .layout import (FREE, LOCAL, REMOTE, PSF_PAGING, PSF_RUNTIME,
                      PlaneConfig)
 from .state import PlaneState, PlaneStats, create
 from .plane import (access, update, evacuate, writeback_all, evict_all,
-                    peek, occupancy, paging_fraction, check_invariants)
-from .baselines import paging_access, object_access, object_reclaim
-from . import sync, offload
+                    peek, occupancy, paging_fraction, check_invariants,
+                    jitted_access, jitted_update, jitted_evacuate)
+from .baselines import (paging_access, object_access, object_reclaim,
+                        jitted_paging_access, jitted_object_access)
+from . import batch, sync, offload
 
 __all__ = [
     "FREE", "LOCAL", "REMOTE", "PSF_PAGING", "PSF_RUNTIME", "PlaneConfig",
@@ -25,5 +28,7 @@ __all__ = [
     "access", "update", "evacuate", "writeback_all", "evict_all",
     "peek", "occupancy", "paging_fraction", "check_invariants",
     "paging_access", "object_access", "object_reclaim",
-    "sync", "offload",
+    "jitted_access", "jitted_update", "jitted_evacuate",
+    "jitted_paging_access", "jitted_object_access",
+    "batch", "sync", "offload",
 ]

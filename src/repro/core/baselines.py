@@ -12,14 +12,22 @@
   CPU-starved regime from the paper (scan a bounded window -> evict
   near-arbitrary objects -> thrashing).
 
-Both reuse the PlaneState/PlaneConfig machinery so the benchmarks compare
-pure policy differences.
+Both ingress paths run on the plan-then-execute batch engine
+(:mod:`repro.core.batch`) so all three planes share the same data movers
+and the benchmarks compare pure policy differences; the object plane's
+LRU egress loop below stays scalar because the paper's point is exactly
+that object-granular egress serializes on metadata scans.
 """
 from __future__ import annotations
 
+import functools
+from functools import partial
+
+import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import batch as batch_lib
 from . import paths
 from . import state as st
 from .layout import FREE, LOCAL, REMOTE, PlaneConfig
@@ -31,33 +39,11 @@ INF32 = jnp.iinfo(jnp.int32).max
 # Fastswap analogue
 # --------------------------------------------------------------------------
 
-def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray):
+def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  *, mode: str | None = None):
     """Page-granular plane: every miss pages in (with readahead); no CAT,
     no PSF consultation, no object moves.  Egress is the shared page-out."""
-    R = obj_ids.shape[0]
-    s = s._replace(step=s.step + 1)
-    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
-
-    def body(i, carry):
-        s, out = carry
-        o = obj_ids[i]
-        vaddr = s.obj_loc[o]
-        v = vaddr // cfg.page_objs
-        is_local = s.backing[v] == LOCAL
-        s = lax.cond(
-            is_local,
-            lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
-            lambda s: paths.page_in_with_readahead(
-                cfg, s._replace(stats=st.bump(s.stats, misses=1)), v),
-            s)
-        # page-level recency only (no card profiling — that's the point)
-        s = s._replace(clock=s.clock.at[v].set(s.step))
-        row = s.frames[s.frame_of[v], vaddr % cfg.page_objs]
-        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
-        return s, out
-
-    s, out = lax.fori_loop(0, R, body, (s, out))
-    return s, out
+    return batch_lib.paging_access(cfg, s, obj_ids, mode=mode)
 
 
 # --------------------------------------------------------------------------
@@ -182,33 +168,29 @@ def object_reclaim(cfg: PlaneConfig, s: st.PlaneState, target_free: int
 
 
 def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  reclaim_free_target: int = 2):
+                  reclaim_free_target: int = 2, *, mode: str | None = None):
     """Object-granular plane (AIFM analogue): every miss object-fetches;
     after the batch, reclaim via the object-level LRU if frames are tight."""
-    R = obj_ids.shape[0]
-    s = s._replace(step=s.step + 1)
-    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
+    return batch_lib.object_access(cfg, s, obj_ids, reclaim_free_target,
+                                   mode=mode, reclaim=object_reclaim)
 
-    def body(i, carry):
-        s, out = carry
-        o = obj_ids[i]
-        v = s.obj_loc[o] // cfg.page_objs
-        is_local = s.backing[v] == LOCAL
-        s = lax.cond(
-            is_local,
-            lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
-            lambda s: paths.object_in(
-                cfg, s._replace(stats=st.bump(s.stats, misses=1)), o),
-            s)
-        va2 = s.obj_loc[o]
-        v2, slot2 = va2 // cfg.page_objs, va2 % cfg.page_objs
-        # object-level hotness tracking (the expensive always-on metadata)
-        s = s._replace(obj_last=s.obj_last.at[o].set(s.step),
-                       clock=s.clock.at[v2].set(s.step))
-        row = s.frames[s.frame_of[v2], slot2]
-        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
-        return s, out
 
-    s, out = lax.fori_loop(0, R, body, (s, out))
-    s = object_reclaim(cfg, s, reclaim_free_target)
-    return s, out
+# memoized jit entry points (one compilation per config per process — see
+# plane.jitted_access; wrappers normalize ``mode`` before the cache lookup)
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paging_access(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(paging_access, cfg, mode=mode))
+
+
+def jitted_paging_access(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_paging_access(cfg, mode or cfg.access_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_object_access(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(object_access, cfg, mode=mode))
+
+
+def jitted_object_access(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_object_access(cfg, mode or cfg.access_mode)

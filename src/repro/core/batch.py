@@ -1,0 +1,492 @@
+"""Plan-then-execute batch ingress engine (the production access path).
+
+The scalar loop in the original ``plane.access`` threaded the whole plane
+state through one ``lax.fori_loop`` iteration *per request*, serializing
+every dereference and never touching the batched Pallas kernels.  This
+module replaces it with a three-stage engine:
+
+  1. **Plan** (vectorized over the batch): gather ``obj_loc``, classify each
+     request hit/miss against the batch-entry state, split misses by the
+     page's PSF, and dedup — paging misses per *page*, runtime misses per
+     *object* — in first-appearance order (sort/unique-style masking).
+  2. **Execute** (page-granular, sequential only where eviction decisions
+     are inherently ordered):
+       * *paging plan*  — one ``page_in_with_readahead`` per deduped victim
+         page (a dynamic-trip-count loop over the deduped plan, not the
+         request batch),
+       * *runtime plan* — fill-page capacity is computed with prefix
+         arithmetic, fresh log pages are allocated up front, and the rows
+         themselves move in ONE batched ``kernels.gather_rows`` +
+         scatter — no per-object append chains.
+  3. **Finish** (vectorized): CAT/access-bit/clock/obj_last profiling is
+     applied in a single ``cat_update``-style scatter pass, and results are
+     read with one batched gather over the final locations.
+
+Batch semantics (shared by both executors, see DESIGN.md §Batch ingress):
+classification happens once against batch-entry state; duplicate requests
+for an already-scheduled page/object count as hits; a page evicted
+mid-batch under extreme memory pressure is *not* re-faulted — the final
+gather falls back to its (written-back) slab copy, so results are always
+ground truth.
+
+``mode="reference"`` runs the same plan through a scalar executor (one
+state update per moved row / touched card, using the ``paths`` helpers) —
+the oracle the equivalence tests compare the batched executor against,
+byte-for-byte.
+
+The kernel dispatch (``PlaneConfig.kernel_impl``) follows ``kernels.ops``:
+``"auto"`` uses Pallas on TPU and the jnp reference elsewhere;
+``"interpret"`` runs the Pallas kernel bodies in interpret mode so CPU CI
+exercises the real kernel code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ops as kops
+from . import paths
+from . import state as st
+from .layout import FREE, LOCAL, REMOTE, PlaneConfig
+
+
+# --------------------------------------------------------------------------
+# planning primitives (vectorized dedup / classification)
+# --------------------------------------------------------------------------
+
+def _first_of(keys: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """First-appearance flags: ``out[i]`` is True iff ``mask[i]`` and no
+    ``j < i`` has ``mask[j] and keys[j] == keys[i]``.  O(R^2) compare —
+    trivial for serving-batch sizes and fully parallel."""
+    R = keys.shape[0]
+    i = jnp.arange(R, dtype=jnp.int32)
+    same = (keys[None, :] == keys[:, None]) & mask[None, :]
+    first_j = jnp.min(jnp.where(same, i[None, :], R), axis=1)
+    return mask & (first_j == i)
+
+
+def _compact(keys: jnp.ndarray, first: jnp.ndarray):
+    """Pack the flagged keys to the front (first-appearance order).
+    Returns (plan [R] int32 with -1 padding, count)."""
+    R = keys.shape[0]
+    pos = jnp.cumsum(first.astype(jnp.int32)) - 1
+    idx = jnp.where(first, pos, R)            # R = out of bounds -> dropped
+    plan = jnp.full((R,), -1, jnp.int32).at[idx].set(keys)
+    return plan, jnp.sum(first.astype(jnp.int32))
+
+
+class AccessPlan(NamedTuple):
+    """Fixed-shape pytree describing one batch's ingress work.  Because the
+    shapes depend only on the batch size, a future sharded plane can compute
+    the next batch's plan on host while the previous one executes."""
+
+    vpage: jnp.ndarray      # [R] entry vpages (soft-pin / recency targets)
+    page_plan: jnp.ndarray  # [R] deduped paging-miss pages (-1 pad)
+    n_pages: jnp.ndarray    # [] number of valid entries in page_plan
+    obj_plan: jnp.ndarray   # [R] deduped runtime-miss objects (-1 pad)
+    n_objs: jnp.ndarray     # [] number of valid entries in obj_plan
+
+
+def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                *, split_by_psf: bool = True, all_runtime: bool = False
+                ) -> AccessPlan:
+    """Classify the batch and build the two ingress plans.
+
+    ``split_by_psf=False`` sends every miss down the paging plan (Fastswap
+    baseline); ``all_runtime=True`` sends every miss down the runtime plan
+    (AIFM baseline)."""
+    vaddr = s.obj_loc[obj_ids]
+    v = vaddr // cfg.page_objs
+    local = s.backing[v] == LOCAL
+    if all_runtime:
+        pg_mask = jnp.zeros_like(local)
+        rt_mask = ~local
+    elif split_by_psf:
+        psf = s.psf[v]
+        pg_mask = ~local & psf
+        rt_mask = ~local & ~psf
+    else:
+        pg_mask = ~local
+        rt_mask = jnp.zeros_like(local)
+    page_plan, n_pages = _compact(v, _first_of(v, pg_mask))
+    obj_plan, n_objs = _compact(obj_ids, _first_of(obj_ids, rt_mask))
+    return AccessPlan(v, page_plan, n_pages, obj_plan, n_objs)
+
+
+# --------------------------------------------------------------------------
+# execution: paging plan
+# --------------------------------------------------------------------------
+
+def _exec_paging(cfg: PlaneConfig, s: st.PlaneState, plan: AccessPlan
+                 ) -> st.PlaneState:
+    """Fault in the deduped miss pages.  Sequential over *pages* (each
+    page-in may evict, and eviction decisions are ordered), but the trip
+    count is the deduped page count, not the request count."""
+
+    def body(i, s):
+        v = jnp.maximum(plan.page_plan[i], 0)
+        # a page later in the plan may have been pulled in by an earlier
+        # page's readahead window — skip it
+        still_remote = s.backing[v] == REMOTE
+        return lax.cond(still_remote,
+                        lambda s: paths.page_in_with_readahead(cfg, s, v),
+                        lambda s: s, s)
+
+    return lax.fori_loop(0, plan.n_pages, body, s)
+
+
+# --------------------------------------------------------------------------
+# execution: runtime plan
+# --------------------------------------------------------------------------
+
+def _exec_runtime(cfg: PlaneConfig, s: st.PlaneState, obj_plan: jnp.ndarray,
+                  n_move: jnp.ndarray, *, scalar: bool) -> st.PlaneState:
+    """Move the deduped miss objects onto the ingress fill page(s).
+
+    The append-slot of every object is computed up front with prefix
+    arithmetic over the fill cursor; fresh log pages are allocated before
+    any row moves (so allocation can never page out a page that still has
+    pending appends).  The batched executor then fetches all rows with one
+    ``gather_rows`` call and scatters them into the frame pool; the scalar
+    executor replays the same plan one row at a time."""
+    P, V, F, O = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.num_objs
+    R, D = obj_plan.shape[0], cfg.obj_dim
+
+    # ---- fill-capacity plan (prefix arithmetic over the cursor state)
+    cur0 = s.fill_vpage
+    have = cur0 >= 0
+    a0 = jnp.where(have, s.alloc_count[jnp.maximum(cur0, 0)], P)
+    free0 = P - a0                       # free slots on the current cursor
+    use0 = jnp.minimum(n_move, free0)
+    overflow = n_move - use0
+    n_fresh = (overflow + P - 1) // P    # fresh log pages needed
+    MAXF = (R + P - 1) // P + 1          # static bound
+
+    def alloc_body(j, carry):
+        s, fresh = carry
+        s, v = paths._fresh_vpage(cfg, s)        # pinned on allocation
+        return s, fresh.at[j].set(v)
+
+    fresh0 = jnp.full((MAXF,), -1, jnp.int32)
+    s, fresh = lax.fori_loop(0, n_fresh, alloc_body, (s, fresh0))
+
+    # ---- destination of move t: cursor first, then fresh pages in order
+    t = jnp.arange(R, dtype=jnp.int32)
+    valid = t < n_move
+    tt = t - use0
+    in_cur = t < use0
+    v_new = jnp.where(in_cur, jnp.maximum(cur0, 0),
+                      fresh[jnp.clip(tt // P, 0, MAXF - 1)])
+    v_new = jnp.where(valid, v_new, 0)
+    slot_new = jnp.where(valid, jnp.where(in_cur, a0 + t, tt % P), 0)
+
+    o = jnp.maximum(obj_plan, 0)
+    old = s.obj_loc[o]
+    v_old, slot_old = old // P, old % P
+
+    if scalar:
+        def move_body(k, s):
+            f_new = s.frame_of[v_new[k]]
+            row = s.slab[v_old[k], slot_old[k]]
+            s = s._replace(
+                frames=s.frames.at[f_new, slot_new[k]].set(row),
+                obj_loc=s.obj_loc.at[o[k]].set(v_new[k] * P + slot_new[k]),
+                obj_of=s.obj_of.at[v_new[k], slot_new[k]].set(o[k]),
+                alloc_count=s.alloc_count.at[v_new[k]].add(1),
+                live_count=s.live_count.at[v_new[k]].add(1),
+                cat=s.cat.at[v_new[k], slot_new[k]].set(True),
+            )
+            return paths._kill_old_copy(cfg, s, v_old[k], slot_old[k])
+
+        s = lax.fori_loop(0, n_move, move_body, s)
+    else:
+        # one batched gather (the Pallas object-ingress kernel on TPU) ...
+        src_flat = jnp.where(valid, v_old * P + slot_old, -1)
+        rows = kops.gather_rows(s.slab.reshape(V * P, D), src_flat,
+                                impl=cfg.kernel_impl)
+        # ... and one batched scatter into the frame pool
+        f_dst = jnp.where(valid, s.frame_of[v_new] * P + slot_new, F * P)
+        frames = s.frames.reshape(F * P, D).at[f_dst].set(rows)
+
+        dst_flat = jnp.where(valid, v_new * P + slot_new, V * P)
+        old_flat = jnp.where(valid, v_old * P + slot_old, V * P)
+        v_new_m = jnp.where(valid, v_new, V)
+        v_old_m = jnp.where(valid, v_old, V)
+        obj_of = s.obj_of.reshape(V * P).at[dst_flat].set(o)
+        obj_of = obj_of.at[old_flat].set(-1)
+        live = s.live_count.at[v_new_m].add(1).at[v_old_m].add(-1)
+        s = s._replace(
+            frames=frames.reshape(F, P, D),
+            obj_loc=s.obj_loc.at[jnp.where(valid, o, O)].set(
+                v_new * P + slot_new),
+            obj_of=obj_of.reshape(V, P),
+            alloc_count=s.alloc_count.at[v_new_m].add(1),
+            live_count=live,
+            cat=s.cat.reshape(V * P).at[dst_flat].set(True).reshape(V, P),
+        )
+        # GC source pages this batch fully drained (deferred equivalent of
+        # the scalar path's per-move _kill_old_copy)
+        touched = jnp.zeros((V,), bool).at[v_old_m].set(True)
+        drained = touched & (s.live_count == 0) & (s.pin == 0)
+        s = s._replace(
+            backing=jnp.where(drained, jnp.int8(FREE), s.backing),
+            dirty=jnp.where(drained, False, s.dirty),
+        )
+
+    # ---- cursor bookkeeping: the last fresh page becomes the fill cursor;
+    # the retired cursor and intermediate (already-full) fresh pages unpin
+    retired = (n_fresh > 0) & have
+    pin = s.pin.at[jnp.where(retired, jnp.maximum(cur0, 0), V)].add(-1)
+    j = jnp.arange(MAXF)
+    interm = jnp.where(j < n_fresh - 1, jnp.maximum(fresh, 0), V)
+    pin = pin.at[interm].add(-1)
+    new_cursor = jnp.where(n_fresh > 0,
+                           fresh[jnp.clip(n_fresh - 1, 0, MAXF - 1)], cur0)
+    return s._replace(pin=pin, fill_vpage=new_cursor,
+                      stats=st.bump(s.stats, obj_ins=n_move))
+
+
+# --------------------------------------------------------------------------
+# finish: profiling pass + batched result gather
+# --------------------------------------------------------------------------
+
+def _profile(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
+             with_cat: bool, with_obj_last: bool, scalar: bool
+             ) -> st.PlaneState:
+    """Record every access at its *final* location in one vectorized pass
+    (cat_update-style: duplicate touches OR together, no scatter hazards)."""
+    va = s.obj_loc[obj_ids]
+    v, slot = va // cfg.page_objs, va % cfg.page_objs
+    if scalar:
+        def body(i, s):
+            if with_cat:
+                s = paths.touch(cfg, s, v[i], slot[i],
+                                obj_id=obj_ids[i] if with_obj_last else None)
+            else:
+                s = s._replace(clock=s.clock.at[v[i]].set(s.step))
+                if with_obj_last:
+                    s = s._replace(obj_last=s.obj_last.at[obj_ids[i]].set(s.step))
+            return s
+
+        return lax.fori_loop(0, obj_ids.shape[0], body, s)
+    if with_cat:
+        s = s._replace(cat=s.cat.at[v, slot].set(True),
+                       access=s.access.at[v, slot].set(True))
+    s = s._replace(clock=s.clock.at[v].set(s.step))
+    if with_obj_last:
+        s = s._replace(obj_last=s.obj_last.at[obj_ids].set(s.step))
+    return s
+
+
+def _gather_final(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  *, scalar: bool) -> jnp.ndarray:
+    """Read every requested row at its final location with one batched
+    gather per tier.  Under extreme pressure a target can be paged out
+    again mid-batch; its row is then served from the written-back slab
+    copy, so the result is ground truth either way."""
+    P, V, F, D = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.obj_dim
+    va = s.obj_loc[obj_ids]
+    v, slot = va // P, va % P
+    local = s.backing[v] == LOCAL
+    if scalar:
+        R = obj_ids.shape[0]
+        out = jnp.zeros((R, D), cfg.dtype)
+
+        def body(i, out):
+            row = jnp.where(local[i],
+                            s.frames[jnp.maximum(s.frame_of[v[i]], 0), slot[i]],
+                            s.slab[v[i], slot[i]])
+            return lax.dynamic_update_index_in_dim(out, row, i, axis=0)
+
+        return lax.fori_loop(0, R, body, out)
+    fidx = jnp.where(local, jnp.maximum(s.frame_of[v], 0) * P + slot, -1)
+    sidx = jnp.where(local, -1, v * P + slot)
+    rows_l = kops.gather_rows(s.frames.reshape(F * P, D), fidx,
+                              impl=cfg.kernel_impl)
+    rows_r = kops.gather_rows(s.slab.reshape(V * P, D), sidx,
+                              impl=cfg.kernel_impl)
+    return jnp.where(local[:, None], rows_l, rows_r)
+
+
+# --------------------------------------------------------------------------
+# the engine entry points
+# --------------------------------------------------------------------------
+
+def _resolve(cfg: PlaneConfig, mode) -> bool:
+    mode = mode or cfg.access_mode
+    if mode not in ("batch", "reference"):
+        raise ValueError(f"unknown access mode: {mode!r}")
+    return mode == "reference"
+
+
+def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
+           mode: str | None = None):
+    """Batched hybrid access: plan, execute both ingress paths, profile,
+    gather.  Returns ``(state, rows[R, D])``."""
+    scalar = _resolve(cfg, mode)
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    plan = plan_access(cfg, s, obj_ids)
+    misses = plan.n_pages + plan.n_objs
+    s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
+    # pre-scope barrier analogue: refresh the recency of every target page
+    # so mid-batch eviction prefers non-target pages (soft pin; the hard
+    # deref-count pins stay host-side, see sync.py)
+    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = _exec_paging(cfg, s, plan)
+    s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
+    s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
+                 scalar=scalar)
+    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    return s, rows
+
+
+def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+           rows: jnp.ndarray, *, mode: str | None = None) -> st.PlaneState:
+    """Batched write-through-local: fault in, overwrite rows (last write
+    wins for duplicate ids), mark dirty."""
+    scalar = _resolve(cfg, mode)
+    P, V, F = cfg.page_objs, cfg.num_vpages, cfg.num_frames
+    R = obj_ids.shape[0]
+    rows = rows.astype(cfg.dtype)
+    s = s._replace(step=s.step + 1)
+    plan = plan_access(cfg, s, obj_ids)
+    misses = plan.n_pages + plan.n_objs
+    s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
+    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = _exec_paging(cfg, s, plan)
+    s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
+    s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
+                 scalar=scalar)
+
+    va = s.obj_loc[obj_ids]
+    v, slot = va // P, va % P
+    local = s.backing[v] == LOCAL
+    if scalar:
+        def body(i, s):
+            def to_frames(s):
+                f = jnp.maximum(s.frame_of[v[i]], 0)
+                return s._replace(
+                    frames=s.frames.at[f, slot[i]].set(rows[i]),
+                    dirty=s.dirty.at[v[i]].set(True))
+
+            def to_slab(s):
+                return s._replace(slab=s.slab.at[v[i], slot[i]].set(rows[i]))
+
+            return lax.cond(local[i], to_frames, to_slab, s)
+
+        return lax.fori_loop(0, R, body, s)
+
+    # last-wins dedup for duplicate ids, then one scatter per tier
+    i = jnp.arange(R, dtype=jnp.int32)
+    same = (obj_ids[None, :] == obj_ids[:, None])
+    last = jnp.max(jnp.where(same, i[None, :], -1), axis=1) == i
+    fidx = jnp.where(last & local, jnp.maximum(s.frame_of[v], 0) * P + slot,
+                     F * P)
+    sidx = jnp.where(last & ~local, v * P + slot, V * P)
+    D = cfg.obj_dim
+    return s._replace(
+        frames=s.frames.reshape(F * P, D).at[fidx].set(rows).reshape(F, P, D),
+        slab=s.slab.reshape(V * P, D).at[sidx].set(rows).reshape(
+            cfg.num_vpages, P, D),
+        dirty=s.dirty.at[jnp.where(local, v, V)].set(True),
+    )
+
+
+# --------------------------------------------------------------------------
+# evacuation append-stream planning (used by plane.evacuate)
+# --------------------------------------------------------------------------
+
+def plan_append_stream(cfg: PlaneConfig, s: st.PlaneState, which: str,
+                       mask: jnp.ndarray):
+    """Plan appending the masked slots of one page to the named fill stream.
+
+    ``mask`` is a [P] bool of source slots (so at most one fresh page is
+    ever needed).  Allocates that fresh page up front (pinned), updates the
+    stream cursor and the destination alloc/live counts, and returns
+    ``(state, v_new[P], slot_new[P], in_cur[P], cursor_page, fresh_page,
+    retired_page)`` where the destination arrays are only meaningful where
+    ``mask`` holds and ``in_cur`` says whether a slot lands on the
+    pre-existing cursor page (vs the fresh page).
+
+    A cursor that fills up retires, but it is NOT unpinned here: its
+    destination slots have not been written yet, and a later allocation
+    (the other evacuation stream's fresh page) could otherwise pick the
+    unpinned page as an eviction victim while writes are pending.  The
+    caller must unpin ``retired_page`` (when >= 0) after the data
+    movement lands."""
+    P, V = cfg.page_objs, cfg.num_vpages
+    n = jnp.sum(mask.astype(jnp.int32))
+    cur0 = getattr(s, which)
+    have = cur0 >= 0
+    a0 = jnp.where(have, s.alloc_count[jnp.maximum(cur0, 0)], P)
+    free0 = P - a0
+    use0 = jnp.minimum(n, free0)
+    need_fresh = n > free0
+
+    s, vfresh = lax.cond(
+        need_fresh,
+        lambda s: paths._fresh_vpage(cfg, s),
+        lambda s: (s, jnp.asarray(-1, jnp.int32)), s)
+
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    in_cur = rank < use0
+    v_new = jnp.where(in_cur, jnp.maximum(cur0, 0), jnp.maximum(vfresh, 0))
+    slot_new = jnp.where(in_cur, a0 + rank, rank - use0)
+
+    vm = jnp.where(mask, v_new, V)
+    s = s._replace(alloc_count=s.alloc_count.at[vm].add(1),
+                   live_count=s.live_count.at[vm].add(1))
+    # cursor bookkeeping: a filled cursor retires (deferred unpin, see above)
+    retired_page = jnp.where(need_fresh & have, cur0, -1)
+    new_cur = jnp.where(need_fresh, vfresh, cur0)
+    s = s._replace(**{which: new_cur})
+    used_cur = jnp.where(use0 > 0, cur0, -1)
+    return s, v_new, slot_new, in_cur, used_cur, vfresh, retired_page
+
+
+# --------------------------------------------------------------------------
+# baseline planes on the same engine
+# --------------------------------------------------------------------------
+
+def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  *, mode: str | None = None):
+    """Fastswap-analogue plane on the batch engine: every miss takes the
+    paging plan (no PSF consultation, no CAT, no object moves)."""
+    scalar = _resolve(cfg, mode)
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    plan = plan_access(cfg, s, obj_ids, split_by_psf=False)
+    s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_pages,
+                                 misses=plan.n_pages))
+    # page-level recency only (no card profiling — that's the point)
+    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = _exec_paging(cfg, s, plan)
+    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    return s, rows
+
+
+def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  reclaim_free_target: int = 2, *, mode: str | None = None,
+                  reclaim=None):
+    """AIFM-analogue plane on the batch engine: every miss object-fetches
+    through the runtime plan; after the batch the caller-supplied
+    ``reclaim`` (the object-level LRU egress loop) runs if frames are
+    tight."""
+    scalar = _resolve(cfg, mode)
+    R = obj_ids.shape[0]
+    s = s._replace(step=s.step + 1)
+    plan = plan_access(cfg, s, obj_ids, all_runtime=True)
+    s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_objs,
+                                 misses=plan.n_objs))
+    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
+    # object-level hotness tracking (the expensive always-on metadata)
+    s = _profile(cfg, s, obj_ids, with_cat=False, with_obj_last=True,
+                 scalar=scalar)
+    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    if reclaim is not None:
+        s = reclaim(cfg, s, reclaim_free_target)
+    return s, rows

@@ -19,9 +19,16 @@ Paper mapping (Atlas, §4):
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax.numpy as jnp
+
+
+def _default_kernel_impl() -> str:
+    """Kernel dispatch default; CI sets REPRO_KERNEL_IMPL=interpret so the
+    CPU suite executes the real Pallas kernel bodies in interpret mode."""
+    return os.environ.get("REPRO_KERNEL_IMPL", "auto")
 
 # Backing kinds for a virtual page.
 FREE = 0     # unallocated vpage (available to the log allocator)
@@ -51,6 +58,10 @@ class PlaneConfig:
     object_evict_batch: int = 8      # objects evicted per reclaim
     lru_scan_budget: int = 0         # 0 = unlimited scan; >0 models CPU-starved LRU
     psf_init_paging: bool = True     # pages start on the paging path (kernel default)
+    # Batch ingress engine (repro.core.batch):
+    access_mode: str = "batch"       # "batch" (vectorized) | "reference" (scalar oracle)
+    kernel_impl: str = dataclasses.field(default_factory=_default_kernel_impl)
+    # "auto" = Pallas on TPU / jnp ref elsewhere; "pallas" | "interpret" | "ref"
 
     def __post_init__(self):
         assert self.num_vpages * self.page_objs >= self.num_objs, (

@@ -1,107 +1,97 @@
 """The Atlas hybrid data plane: batched access, evacuation, writeback.
 
-``access`` is the batched read barrier (paper Algorithm 1/2): for each
-requested object it
+``access`` is the batched read barrier (paper Algorithm 1/2), served by the
+plan-then-execute engine in :mod:`repro.core.batch`: the whole request
+batch is classified against the batch-entry state, misses are deduped and
+split by PSF into a paging plan (whole-page fetches, vaddrs stable) and a
+runtime plan (objects moved to the ingress fill page, smart pointers
+rewritten), profiling (CAT card bits, access bits, page clocks) is applied
+in one vectorized pass, and results are read with one batched gather.
+``mode="reference"`` replays the same plan through a scalar executor — the
+equivalence oracle.
 
-  1. increments the deref count of the object's page (pre-scope barrier;
-     Invariant #2: pinned pages are never chosen as page-out victims),
-  2. on a miss consults the page's PSF and takes either the **paging** path
-     (whole-page fetch, vaddrs stable) or the **runtime** path (object moved
-     to the ingress fill page, smart pointer rewritten),
-  3. records the access in the CAT (card bit), the per-object access bit and
-     the page clock (always-on profiling),
-  4. after the batch, gathers all rows (now guaranteed local) and releases
-     the deref counts (post-scope barrier).
-
-Eviction happens only page-granularly inside ``alloc_frame`` (egress path,
-paper §4.1) — the PSF of the victim is recomputed from its CAR there.
+Eviction happens only page-granularly inside ``paths.alloc_frame`` (egress
+path, paper §4.1) — the PSF of the victim is recomputed from its CAR
+there.  ``evacuate`` is the concurrent compactor analogue: victims are
+selected by garbage ratio and their live rows are re-packed hot/cold
+through the ``kernels.compact`` page-assembly kernel.
 """
 from __future__ import annotations
+
+import functools
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..kernels import ops as kops
+from . import batch as batch_lib
 from . import paths
 from . import state as st
 from .layout import FREE, LOCAL, REMOTE, PlaneConfig
 
 
 # --------------------------------------------------------------------------
-# batched access (the hybrid ingress)
+# batched access (the hybrid ingress) — plan-then-execute engine
 # --------------------------------------------------------------------------
 
-def _ensure_local_one(cfg: PlaneConfig, s: st.PlaneState, o) -> st.PlaneState:
-    """Fault in object ``o`` if needed, pin its (final) page, record access."""
-    vaddr = s.obj_loc[o]
-    v = vaddr // cfg.page_objs
-    is_local = s.backing[v] == LOCAL
-
-    def miss(s):
-        s = s._replace(stats=st.bump(s.stats, misses=1))
-        return lax.cond(
-            s.psf[v],
-            lambda s: paths.page_in_with_readahead(cfg, s, v),
-            lambda s: paths.object_in(cfg, s, o),
-            s)
-
-    s = lax.cond(is_local,
-                 lambda s: s._replace(stats=st.bump(s.stats, hits=1)),
-                 miss, s)
-
-    # the object may have moved (runtime path): re-read the smart pointer
-    vaddr2 = s.obj_loc[o]
-    v2, slot2 = vaddr2 // cfg.page_objs, vaddr2 % cfg.page_objs
-    s = paths.pin_page(s, v2)                       # pre-scope barrier
-    s = paths.touch(cfg, s, v2, slot2, obj_id=o)    # CAT + access bit + clock
-    return s
-
-
-def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray):
+def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
+           mode: str | None = None):
     """Batched hybrid access.  Returns ``(state, rows[R, D])``.
 
-    Atlas uses *fine-grained* dereference scopes — one per smart-pointer
-    dereference (§4.2) — so each request pins its page only between fault-in
-    and the raw read, then releases it.  At most a handful of pages are
-    pinned at any time (current page + fill cursors), which is the paper's
-    live-lock bound."""
-    R = obj_ids.shape[0]
-    s = s._replace(step=s.step + 1)
-    out = jnp.zeros((R, cfg.obj_dim), cfg.dtype)
-
-    def body(i, carry):
-        s, out = carry
-        o = obj_ids[i]
-        s = _ensure_local_one(cfg, s, o)          # ends with the page pinned
-        vaddr = s.obj_loc[o]
-        v, slot = vaddr // cfg.page_objs, vaddr % cfg.page_objs
-        row = s.frames[s.frame_of[v], slot]       # raw-pointer use
-        out = lax.dynamic_update_index_in_dim(out, row, i, axis=0)
-        s = paths.unpin_page(s, v)                # post-scope barrier
-        return s, out
-
-    s, out = lax.fori_loop(0, R, body, (s, out))
-    return s, out
+    ``mode`` is ``"batch"`` (vectorized engine, default) or ``"reference"``
+    (scalar oracle executing the identical plan); ``None`` defers to
+    ``cfg.access_mode``."""
+    return batch_lib.access(cfg, s, obj_ids, mode=mode)
 
 
 def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-           rows: jnp.ndarray):
+           rows: jnp.ndarray, *, mode: str | None = None) -> st.PlaneState:
     """Batched write-through-local: fault in, overwrite rows, mark dirty."""
-    R = obj_ids.shape[0]
-    s = s._replace(step=s.step + 1)
-    rows = rows.astype(cfg.dtype)
+    return batch_lib.update(cfg, s, obj_ids, rows, mode=mode)
 
-    def body(i, s):
-        o = obj_ids[i]
-        s = _ensure_local_one(cfg, s, o)
-        vaddr = s.obj_loc[o]
-        v, slot = vaddr // cfg.page_objs, vaddr % cfg.page_objs
-        s = s._replace(frames=s.frames.at[s.frame_of[v], slot].set(rows[i]),
-                       dirty=s.dirty.at[v].set(True))
-        return paths.unpin_page(s, v)
 
-    return lax.fori_loop(0, R, body, s)
+# --------------------------------------------------------------------------
+# memoized jit entry points
+# --------------------------------------------------------------------------
+# ``jax.jit(partial(access, cfg))`` builds a NEW callable every time, so two
+# call sites with the same config compile the same program twice.  These
+# helpers key the jitted executable on the (hashable) PlaneConfig — every
+# engine/test/benchmark in a process shares one compilation per config.
+# The thin wrappers normalize defaulted arguments before the cache lookup
+# (lru_cache keys raw call args, so ``f(cfg)`` and ``f(cfg, "batch")``
+# would otherwise compile twice).
+
+@functools.lru_cache(maxsize=None)
+def _jitted_access(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(access, cfg, mode=mode))
+
+
+def jitted_access(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_access(cfg, mode or cfg.access_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_update(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(update, cfg, mode=mode))
+
+
+def jitted_update(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_update(cfg, mode or cfg.access_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_evacuate(cfg: PlaneConfig, garbage_threshold: float | None,
+                     max_pages: int):
+    return jax.jit(partial(evacuate, cfg, garbage_threshold=garbage_threshold,
+                           max_pages=max_pages))
+
+
+def jitted_evacuate(cfg: PlaneConfig, garbage_threshold: float | None = None,
+                    max_pages: int = 16):
+    return _jitted_evacuate(cfg, garbage_threshold, max_pages)
 
 
 # --------------------------------------------------------------------------
@@ -116,16 +106,20 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
     Live objects are segregated by their access bit: recently-accessed
     ("hot") objects are appended to a dedicated hot destination page,
     the rest to a cold one — manufacturing the spatial locality that lets
-    subsequent accesses take the cheap paging path.  All access bits are
-    cleared at the end (paper: "cleared by the evacuator at the end of each
-    evacuation").
+    subsequent accesses take the cheap paging path.  Each victim's moves
+    are planned as two append streams and executed with the
+    ``kernels.compact`` page-assembly kernel (one gather-DMA per
+    destination page) instead of a per-slot append chain.  All access bits
+    are cleared at the end (paper: "cleared by the evacuator at the end of
+    each evacuation").
 
     Evacuation is *incremental*: at most ``max_pages`` victims (the highest
     garbage ratios) are compacted per call, bounding the pause the
     concurrent evacuator imposes on the application — exactly the
     tail-latency discipline the paper demands of memory management."""
     thr = cfg.evac_garbage_threshold if garbage_threshold is None else garbage_threshold
-    P = cfg.page_objs
+    P, V, F, O = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.num_objs
+    D = cfg.obj_dim
 
     # victim selection: top-K local unpinned pages by garbage ratio
     allocated_all = s.alloc_count
@@ -140,8 +134,9 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
 
     def page_body(i, s):
         v = victims[i]
-        # re-check eligibility against the *current* state (earlier moves
-        # may have drained or freed this page)
+        # re-check eligibility against the *current* state (earlier victims
+        # may have evicted or drained this page while allocating
+        # destination frames)
         allocated = s.alloc_count[v]
         dead = allocated - s.live_count[v]
         garbage_ratio = dead.astype(jnp.float32) / jnp.maximum(allocated, 1)
@@ -157,31 +152,65 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
             # pin the source so destination allocation can't page it out
             # from under the compactor (Invariant #3 mechanism)
             s = paths.pin_page(s, v)
+            f_src = jnp.maximum(s.frame_of[v], 0)
+            objs = s.obj_of[v]                      # [P]
+            occ = objs >= 0
+            hotm = occ & s.access[v]
+            coldm = occ & ~s.access[v]
+            was_carded = s.cat[v]
+            n_moved = jnp.sum(occ.astype(jnp.int32))
 
-            def slot_body(p, s):
-                o = s.obj_of[v, p]
+            # plan both append streams (allocates/pins fresh pages first;
+            # retired cursors stay pinned until the compact writes land)
+            s, hv, hslot, hcur, hc, hf, hret = batch_lib.plan_append_stream(
+                cfg, s, "evac_hot_vpage", hotm)
+            s, cv, cslot, ccur, cc, cf, cret = batch_lib.plan_append_stream(
+                cfg, s, "evac_cold_vpage", coldm)
+            v_dst = jnp.where(hotm, hv, cv)
+            s_dst = jnp.where(hotm, hslot, cslot)
 
-                def move(s):
-                    row = s.frames[s.frame_of[v], p]
-                    hot = s.access[v, p]
-                    was_carded = s.cat[v, p]
-                    s, v_new, slot_new = lax.cond(
-                        hot,
-                        lambda s: paths._append_obj(cfg, s, o, row, "evac_hot_vpage"),
-                        lambda s: paths._append_obj(cfg, s, o, row, "evac_cold_vpage"),
-                        s)
-                    # the evacuator preserves card bits across the move (§4.3)
-                    s = s._replace(
-                        cat=s.cat.at[v_new, slot_new].set(was_carded),
-                        access=s.access.at[v_new, slot_new].set(hot),
-                        stats=st.bump(s.stats, evac_moved=1))
-                    return s
+            # assemble the (up to four) destination pages with the compact
+            # kernel: each destination slot DMAs its source row directly
+            src_flat = f_src * P + jnp.arange(P, dtype=jnp.int32)
+            dest_pages = jnp.stack([hc, hf, cc, cf])          # [4]
+            dpi = jnp.where(hotm, jnp.where(hcur, 0, 1),
+                            jnp.where(coldm, jnp.where(ccur, 2, 3), 4))
+            plan = jnp.full((4, P), -1, jnp.int32)
+            plan = plan.at[dpi, jnp.where(occ, s_dst, 0)].set(src_flat)
+            assembled = kops.compact_pages(
+                s.frames.reshape(F * P, D), plan.reshape(4 * P),
+                page_objs=P, impl=cfg.kernel_impl)            # [4, P, D]
+            dest_f = jnp.maximum(s.frame_of[jnp.maximum(dest_pages, 0)], 0)
+            existing = s.frames[dest_f]
+            merged = jnp.where((plan >= 0)[..., None], assembled, existing)
+            frames = s.frames.at[jnp.where(dest_pages >= 0, dest_f, F)].set(
+                merged)
 
-                return lax.cond(o >= 0, move, lambda s: s, s)
-
-            s = lax.fori_loop(0, P, slot_body, s)
+            # smart pointers + occupancy + preserved profiling bits
+            # (the evacuator preserves card bits across the move, §4.3)
+            dst_flat = jnp.where(occ, v_dst * P + s_dst, V * P)
+            s = s._replace(
+                frames=frames,
+                obj_loc=s.obj_loc.at[jnp.where(occ, objs, O)].set(
+                    v_dst * P + s_dst),
+                obj_of=s.obj_of.reshape(V * P).at[dst_flat].set(
+                    objs).reshape(V, P),
+                cat=s.cat.reshape(V * P).at[dst_flat].set(
+                    was_carded).reshape(V, P),
+                access=s.access.reshape(V * P).at[dst_flat].set(
+                    hotm).reshape(V, P),
+                stats=st.bump(s.stats, evac_moved=n_moved),
+            )
+            # the moved rows are in place — NOW the retired cursors may be
+            # unpinned (they are ordinary unpinned pages from here on)
+            pin = s.pin.at[jnp.where(hret >= 0, hret, V)].add(-1)
+            pin = pin.at[jnp.where(cret >= 0, cret, V)].add(-1)
+            s = s._replace(pin=pin)
+            # kill the source copies wholesale
+            s = s._replace(obj_of=s.obj_of.at[v].set(-1),
+                           live_count=s.live_count.at[v].set(0))
             s = paths.unpin_page(s, v)
-            # the pin kept _kill_old_copy's GC away; reclaim explicitly now
+            # the pin kept GC away; reclaim the drained source explicitly
             still_here = s.backing[v] == LOCAL
             s = lax.cond(jnp.logical_and(still_here, s.live_count[v] == 0),
                          lambda s: paths.free_page(cfg, s, v), lambda s: s, s)

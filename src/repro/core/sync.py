@@ -6,8 +6,11 @@ The remaining invariants are realized with the per-page deref counts
 (``PlaneState.pin``):
 
 * Invariant #2 (object-in vs page-out): ``paths._victim_frame`` masks pinned
-  pages out of victim selection; ``plane.access`` pins each request's final
-  page before the batch gather and releases the pins afterwards.
+  pages out of victim selection.  Within one batch the plan-then-execute
+  engine (``repro.core.batch``) additionally refreshes the page clock of
+  every target page up front, so mid-batch eviction prefers non-target
+  pages (a soft pin); should a target still be paged out under extreme
+  pressure, the final gather serves its written-back slab copy.
 * Invariant #3 (deref scope vs evacuation): ``plane.evacuate`` skips pinned
   pages, and pins the source page while compacting it.
 

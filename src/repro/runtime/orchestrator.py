@@ -76,20 +76,27 @@ class Orchestrator:
 
     # -- main loop ----------------------------------------------------------
     def run(self, init_state, num_steps: int, *, max_restarts: int = 10):
-        state, start = self.resume_or_init(init_state)
+        # host-side snapshot: the jitted step may donate the live state's
+        # buffers, which would make ``init_state`` unusable as the restart
+        # fallback after a failure
+        init_host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 init_state)
+        state, start = self.resume_or_init(init_host)
         step = start
         restarts = 0
         while step < num_steps:
             try:
                 state, step = self._run_span(state, step, num_steps)
             except RuntimeError:
-                # node failure: emergency save already happened at the last
-                # checkpoint boundary; recover from disk and continue
+                # node failure: recover from the last checkpoint boundary —
+                # but first let any in-flight async save land, or the
+                # newest checkpoint stays an unpublished .tmp dir
                 restarts += 1
                 self.metrics["restarts"] = restarts
                 if restarts > max_restarts:
                     raise
-                state, step = self.resume_or_init(init_state)
+                self.saver.wait()
+                state, step = self.resume_or_init(init_host)
         self.saver.save(step, state, extra={"next_step": step}, block=True)
         return state
 

@@ -7,6 +7,10 @@ benchmarks (paper §5.3).  Requests arrive on a queue with offered-load
 pacing; the engine drains them in fixed-size batches (continuous
 batching), tracks per-request latency, and periodically runs plane
 maintenance (evacuation) exactly like Atlas's concurrent evacuator.
+
+Every plane runs on the plan-then-execute batch ingress engine
+(``repro.core.batch``); ``EngineConfig.mode="reference"`` swaps in the
+scalar oracle executor for debugging and equivalence runs.
 """
 from __future__ import annotations
 
@@ -31,6 +35,7 @@ class EngineConfig:
     batch: int = 64                 # requests per engine tick
     evac_every: int = 64            # hybrid-plane evacuation period (ticks)
     reclaim_free_target: int = 2    # object plane
+    mode: str = "batch"             # plan-then-execute engine | "reference" oracle
 
 
 class LatencyTracker:
@@ -63,14 +68,16 @@ class Engine:
         self.cfg = cfg
         self.pcfg = pcfg
         self.state = state_lib.create(pcfg, initial)
+        # memoized jit entry points: engines sharing a PlaneConfig share one
+        # compiled executable per op (continuous batching spins up several)
         if cfg.plane == "hybrid":
-            self._access = jax.jit(partial(plane_lib.access, pcfg))
-            self._evac = jax.jit(partial(plane_lib.evacuate, pcfg))
+            self._access = plane_lib.jitted_access(pcfg, cfg.mode)
+            self._evac = plane_lib.jitted_evacuate(pcfg)
         elif cfg.plane == "paging":
-            self._access = jax.jit(partial(baselines.paging_access, pcfg))
+            self._access = baselines.jitted_paging_access(pcfg, cfg.mode)
             self._evac = None
         elif cfg.plane == "object":
-            self._access = jax.jit(partial(baselines.object_access, pcfg))
+            self._access = baselines.jitted_object_access(pcfg, cfg.mode)
             self._evac = None
         else:
             raise ValueError(cfg.plane)

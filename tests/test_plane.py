@@ -7,7 +7,8 @@ from functools import partial
 
 from repro.core import (FREE, LOCAL, REMOTE, PlaneConfig, access, create,
                         evacuate, evict_all, paging_fraction, peek, update,
-                        writeback_all, check_invariants)
+                        writeback_all, check_invariants, jitted_access,
+                        jitted_evacuate, jitted_update)
 from repro.core import paths, sync
 
 
@@ -30,7 +31,7 @@ def test_create_layout():
 
 def test_sequential_access_takes_paging():
     cfg, data, s = mk()
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     s, rows = acc(s, jnp.arange(16, dtype=jnp.int32))
     np.testing.assert_allclose(np.asarray(rows), np.asarray(data[:16]))
     assert int(s.stats.page_ins) == 2           # 2 pages of 8 objects
@@ -40,7 +41,7 @@ def test_sequential_access_takes_paging():
 
 def test_random_access_flips_to_runtime():
     cfg, data, s = mk()
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     rng = np.random.RandomState(0)
     for _ in range(10):
         ids = jnp.asarray(rng.choice(96, 12, replace=False), jnp.int32)
@@ -54,7 +55,7 @@ def test_random_access_flips_to_runtime():
 def test_psf_only_changes_at_pageout():
     """Invariant #1: PSF of a page never changes while it is resident."""
     cfg, data, s = mk()
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     rng = np.random.RandomState(1)
     for _ in range(6):
         before_psf = np.asarray(s.psf)
@@ -72,7 +73,7 @@ def test_update_dirty_writeback():
     cfg, data, s = mk()
     ids = jnp.asarray([5, 40, 80], jnp.int32)
     rows = -jnp.ones((3, 4), jnp.float32)
-    s = jax.jit(partial(update, cfg))(s, ids, rows)
+    s = jitted_update(cfg)(s, ids, rows)
     s = jax.jit(partial(writeback_all, cfg))(s)
     s = jax.jit(partial(evict_all, cfg))(s)
     np.testing.assert_allclose(np.asarray(peek(cfg, s, ids)), np.asarray(rows))
@@ -81,14 +82,14 @@ def test_update_dirty_writeback():
 
 def test_evacuation_compacts_and_segregates():
     cfg, data, s = mk(num_frames=8)
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     rng = np.random.RandomState(2)
     # object-path churn creates garbage on source pages
     for _ in range(20):
         ids = jnp.asarray(rng.choice(96, 12), jnp.int32)
         s, _ = acc(s, ids)
     pre_moved = int(s.stats.evac_moved)
-    s2 = jax.jit(partial(evacuate, cfg, garbage_threshold=0.05))(s)
+    s2 = jitted_evacuate(cfg, garbage_threshold=0.05)(s)
     assert all(check_invariants(cfg, s2).values())
     # data is preserved through compaction
     np.testing.assert_allclose(
@@ -100,7 +101,7 @@ def test_evacuation_compacts_and_segregates():
 def test_pinned_pages_never_evicted():
     """Invariant #2: a pinned page survives eviction pressure."""
     cfg, data, s = mk(num_frames=4)
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     s, _ = acc(s, jnp.arange(8, dtype=jnp.int32))      # page 0 resident
     v0 = int(s.obj_loc[0]) // cfg.page_objs
     s = sync.pin_objects(cfg, s, jnp.asarray([0], jnp.int32))
@@ -114,7 +115,7 @@ def test_pinned_pages_never_evicted():
 
 def test_livelock_guard_forces_paging():
     cfg, data, s = mk(num_frames=4)
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     s, _ = acc(s, jnp.arange(24, dtype=jnp.int32))
     ids = jnp.arange(8, dtype=jnp.int32)
     s = sync.pin_objects(cfg, s, ids)
@@ -128,7 +129,7 @@ def test_livelock_guard_forces_paging():
 def test_car_threshold_behavior():
     """High CAR -> paging; low CAR -> runtime (paper Fig 10 mechanism)."""
     cfg, data, s = mk(car_threshold=0.8)
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     # touch every object on page 1 (full CAR), single object on page 5
     s, _ = acc(s, jnp.arange(8, 16, dtype=jnp.int32))
     s, _ = acc(s, jnp.asarray([40], jnp.int32))

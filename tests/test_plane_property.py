@@ -6,6 +6,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (PlaneConfig, access, baselines, check_invariants,

@@ -16,7 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core import PlaneConfig, access, baselines, create, evacuate
+from repro.core import (PlaneConfig, access, baselines, create, evacuate,
+                        jitted_access, jitted_evacuate, jitted_object_access,
+                        jitted_paging_access)
 from repro.data import kvworkload
 from repro.models import api
 from repro.optim import get_optimizer
@@ -42,9 +44,8 @@ def test_training_reduces_loss():
     assert losses[-1] < losses[0] * 0.5, losses[::10]
 
 
-def _run_plane(plane_fn, cfg, data, workload):
+def _run_plane(fn, cfg, data, workload):
     s = create(cfg, data)
-    fn = jax.jit(plane_fn)
     for ids in workload:
         s, _ = fn(s, jnp.asarray(ids, jnp.int32))
     return jax.device_get(s.stats), s
@@ -66,8 +67,8 @@ def test_hybrid_traffic_adapts_to_pattern():
     seq = list(kvworkload.scan(512, 16, steps=60))
     rnd = list(kvworkload.uniform(512, 16, steps=60))
 
-    hyb = partial(access, cfg)
-    pag = partial(baselines.paging_access, cfg)
+    hyb = jitted_access(cfg)
+    pag = jitted_paging_access(cfg)
 
     # sequential: hybrid ~ paging (fetches pages, no object churn)
     st_h, _ = _run_plane(hyb, cfg, data, seq)
@@ -90,8 +91,8 @@ def test_object_plane_pays_lru_scan_cost():
                       num_vpages=200)
     data = jnp.zeros((512, 16))
     rnd = list(kvworkload.uniform(512, 16, steps=40, seed=5))
-    st_o, _ = _run_plane(partial(baselines.object_access, cfg), cfg, data, rnd)
-    st_h, _ = _run_plane(partial(access, cfg), cfg, data, rnd)
+    st_o, _ = _run_plane(jitted_object_access(cfg), cfg, data, rnd)
+    st_h, _ = _run_plane(jitted_access(cfg), cfg, data, rnd)
     assert int(st_o.lru_scans) > 10 * cfg.num_objs   # repeated full scans
     assert int(st_h.lru_scans) == 0                  # Atlas: no object LRU
 
@@ -109,7 +110,7 @@ def test_evacuation_segregates_hot_objects():
                       num_vpages=120)
     data = jnp.arange(256 * 8, dtype=jnp.float32).reshape(256, 8)
     s = create(cfg, data)
-    acc = jax.jit(partial(access, cfg))
+    acc = jitted_access(cfg)
     # churn: random singles fill the log pages with mixed-heat objects
     for ids in kvworkload.uniform(256, 12, steps=25, seed=4):
         s, _ = acc(s, jnp.asarray(ids))
@@ -117,7 +118,7 @@ def test_evacuation_segregates_hot_objects():
     s = s._replace(access=jnp.zeros_like(s.access))
     hot = jnp.arange(0, 64, 2, dtype=jnp.int32)
     s, _ = acc(s, hot)
-    s2 = jax.jit(partial(evacuate, cfg, garbage_threshold=-1.0, max_pages=64))(s)
+    s2 = jitted_evacuate(cfg, garbage_threshold=-1.0, max_pages=64)(s)
     assert int(s2.stats.evac_moved) > int(s.stats.evac_moved)
     assert all(check_invariants(cfg, s2).values())
     np.testing.assert_allclose(np.asarray(peek(cfg, s2, jnp.arange(256))),
