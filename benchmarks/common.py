@@ -76,6 +76,25 @@ def run_workload(kind: str, cfg: PlaneConfig, workload, *,
     return dt / len(batches) * 1e6, stats, s
 
 
+def calibrate_service_time(pcfg: PlaneConfig, plane: str, gen_fn,
+                           batch: int, steps: int = 12,
+                           n_objs: int = N_OBJS, seed: int = 7) -> float:
+    """Mean synchronous-dispatch batch service time (seconds) of one
+    serving-engine plane — the anchor for offered-load pacing in the
+    latency benchmarks (arrival rate = LOAD_FACTOR / service time)."""
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(EngineConfig(plane=plane, batch=batch, dispatch="sync"),
+                 pcfg, jnp.zeros((pcfg.num_objs, pcfg.obj_dim)))
+    batches = list(gen_fn(n_objs, batch, steps, seed=seed))
+    ts = []
+    for b in batches:
+        t0 = time.time()
+        eng.serve_batch(b)
+        ts.append(time.time() - t0)
+    # median of the warmed tail: robust to one-off jit/GC/scheduler spikes
+    return float(np.median(ts[2:]))
+
+
 def traffic_bytes(cfg: PlaneConfig, stats: dict) -> int:
     """Far-memory bytes moved (both directions)."""
     return (stats["page_ins"] * cfg.page_bytes

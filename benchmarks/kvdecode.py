@@ -1,0 +1,119 @@
+"""Serve-path decode microbenchmarks: kvplane sparse decode + expert fetch.
+
+Times one decode step of ``kvplane.attend_sparse`` at a ``long_500k``-shaped
+geometry (page_tokens=64, frames=96, topk/budget from ``models.api``'s
+sparse config at 8 shards, B=1) plus a multi-sequence cell (B=8 sequences
+sharing the frame pool), and one ``expertplane.ensure_resident`` fetch step
+at a kimi-shaped hot-slot geometry.  Head count / dims are scaled down so
+the slab fits a CPU runner; the fetch-plan work being measured (top-k
+selection, eviction, page-in, hot-row packing) has the production shape.
+
+All cells enter through the state-donating serve entry points
+(``jitted_attend_sparse`` / ``jitted_ensure_resident``) — the form the
+serving loop actually runs; the pre-PR scalar path had no such entry and
+paid a full slab copy per step on top of its serialized fetch loop.
+Each cell reports the batched executor and the scalar ``mode="reference"``
+oracle (the seed-era access path replaying the identical plan).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expertplane as ep
+from repro.core import kvplane
+
+
+def _kv_cfg(batch: int, num_pages: int) -> kvplane.KVPlaneConfig:
+    # long_500k @ 8 shards: NP = ceil(500_000 / (64 * 8)) = 977, B = 1
+    return kvplane.KVPlaneConfig(
+        kv_heads=2, head_dim=64, page_tokens=64, num_pages=num_pages,
+        num_frames=96, batch=batch, sparse_topk=8, fetch_budget=4,
+        dtype=jnp.float32)
+
+
+def _prefill_kv(cfg, seed=0):
+    """Build a fully-written far tier directly (python-loop prefill of ~1k
+    pages would dominate the benchmark)."""
+    rng = np.random.RandomState(seed)
+    s = kvplane.init(cfg)
+    KVH, P, Dh = cfg.kv_heads, cfg.page_tokens, cfg.head_dim
+    pages = cfg.batch * cfg.num_pages
+    k = rng.randn(KVH, pages, P, Dh).astype(np.float32)
+    v = rng.randn(KVH, pages, P, Dh).astype(np.float32)
+    return s._replace(
+        k_slab=jnp.asarray(k), v_slab=jnp.asarray(v),
+        kmax=jnp.asarray(k.max(axis=2)), kmin=jnp.asarray(k.min(axis=2)))
+
+
+def _kv_cell(name, cfg, iters):
+    rows = []
+    rng = np.random.RandomState(1)
+    lengths = jnp.full((cfg.batch,), cfg.num_pages * cfg.page_tokens,
+                       jnp.int32)
+    qs = [jnp.asarray(rng.randn(cfg.batch, 4, cfg.head_dim), jnp.float32)
+          for _ in range(8)]
+    for mode in ["batch", "reference"]:
+        step = kvplane.jitted_attend_sparse(cfg, mode)
+        st = _prefill_kv(cfg)
+        for q in qs:                          # compile + settle the churn
+            out, st = step(st, q, lengths)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        n = 0
+        for _ in range(iters):
+            for q in qs:                      # churn the top-k selection
+                out, st = step(st, q, lengths)
+                n += 1
+        jax.block_until_ready(out)
+        ms = (time.time() - t0) / n * 1e3
+        rows.append((f"{name}/{mode}", ms * 1e3, f"ms_per_step={ms:.3f}"))
+    return rows
+
+
+def run(quick: bool = False):
+    iters = 2 if quick else 5
+    rows = []
+    rows += _kv_cell("kvdecode/attend_sparse_long500k", _kv_cfg(1, 977),
+                     iters)
+    rows += _kv_cell("kvdecode/attend_sparse_multiseq8", _kv_cfg(8, 128),
+                     iters)
+
+    # --- expert fetch (kimi-shaped slots, scaled dims) ---------------------
+    rng = np.random.RandomState(2)
+    ecfg = ep.ExpertPlaneConfig(n_experts=128, d_model=256, d_ff=512,
+                                hot_slots=32, topk=8, fetch_budget=8,
+                                dtype=jnp.float32)
+    wi = jnp.asarray(rng.randn(128, 256, 512) * 0.05, jnp.float32)
+    wg = jnp.asarray(rng.randn(128, 256, 512) * 0.05, jnp.float32)
+    wo = jnp.asarray(rng.randn(128, 512, 256) * 0.05, jnp.float32)
+    masks = [jnp.zeros((128,), bool).at[
+        jnp.asarray(rng.choice(128, 16, replace=False))].set(True)
+        for _ in range(8)]
+    for mode in ["batch", "reference"]:
+        fetch = ep.jitted_ensure_resident(ecfg, mode)
+        es = ep.init(ecfg)
+        for m in masks:                       # compile + settle the churn
+            es = fetch(es._replace(step=es.step + 1), m, wi, wg, wo)
+        jax.block_until_ready(es.clock)
+        t0 = time.time()
+        n = 0
+        for _ in range(iters):
+            for m in masks:                   # churn the hot set
+                es = fetch(es._replace(step=es.step + 1), m, wi, wg, wo)
+                n += 1
+        jax.block_until_ready(es.clock)
+        ms = (time.time() - t0) / n * 1e3
+        rows.append((f"kvdecode/expert_fetch/{mode}", ms * 1e3,
+                     f"ms_per_step={ms:.3f}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

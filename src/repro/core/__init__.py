@@ -17,9 +17,12 @@ from .layout import (FREE, LOCAL, REMOTE, PSF_PAGING, PSF_RUNTIME,
 from .state import PlaneState, PlaneStats, create
 from .plane import (access, update, evacuate, writeback_all, evict_all,
                     peek, occupancy, paging_fraction, check_invariants,
-                    jitted_access, jitted_update, jitted_evacuate)
+                    jitted_access, jitted_update, jitted_evacuate,
+                    jitted_plan_access, jitted_execute_access)
 from .baselines import (paging_access, object_access, object_reclaim,
-                        jitted_paging_access, jitted_object_access)
+                        jitted_paging_access, jitted_object_access,
+                        jitted_plan_paging, jitted_execute_paging,
+                        jitted_plan_object, jitted_execute_object)
 from . import batch, sync, offload
 
 __all__ = [
@@ -29,6 +32,9 @@ __all__ = [
     "peek", "occupancy", "paging_fraction", "check_invariants",
     "paging_access", "object_access", "object_reclaim",
     "jitted_access", "jitted_update", "jitted_evacuate",
+    "jitted_plan_access", "jitted_execute_access",
     "jitted_paging_access", "jitted_object_access",
+    "jitted_plan_paging", "jitted_execute_paging",
+    "jitted_plan_object", "jitted_execute_object",
     "batch", "sync", "offload",
 ]

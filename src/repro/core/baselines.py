@@ -194,3 +194,43 @@ def _jitted_object_access(cfg: PlaneConfig, mode: str):
 
 def jitted_object_access(cfg: PlaneConfig, mode: str | None = None):
     return _jitted_object_access(cfg, mode or cfg.access_mode)
+
+
+# plan/execute split entry points (pipelined serving dispatch — the plan of
+# batch N+1 is enqueued while batch N's execute runs; see serving.engine)
+
+@functools.lru_cache(maxsize=None)
+def _jitted_plan_paging(cfg: PlaneConfig):
+    return jax.jit(partial(batch_lib.plan_access, cfg, split_by_psf=False))
+
+
+def jitted_plan_paging(cfg: PlaneConfig):
+    return _jitted_plan_paging(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_execute_paging(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(batch_lib.execute_paging_access, cfg, mode=mode))
+
+
+def jitted_execute_paging(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_execute_paging(cfg, mode or cfg.access_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_plan_object(cfg: PlaneConfig):
+    return jax.jit(partial(batch_lib.plan_access, cfg, all_runtime=True))
+
+
+def jitted_plan_object(cfg: PlaneConfig):
+    return _jitted_plan_object(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_execute_object(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(batch_lib.execute_object_access, cfg, mode=mode,
+                           reclaim=object_reclaim))
+
+
+def jitted_execute_object(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_execute_object(cfg, mode or cfg.access_mode)

@@ -321,14 +321,18 @@ def _resolve(cfg: PlaneConfig, mode) -> bool:
     return mode == "reference"
 
 
-def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
-           mode: str | None = None):
-    """Batched hybrid access: plan, execute both ingress paths, profile,
-    gather.  Returns ``(state, rows[R, D])``."""
+def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                   plan: AccessPlan, *, mode: str | None = None):
+    """Execute a precomputed ``AccessPlan``: both ingress paths, profiling,
+    final gather.  Returns ``(state, rows[R, D])``.
+
+    This is the second half of ``access``; the serving engine dispatches
+    ``plan_access`` and ``execute_access`` as separate device calls so the
+    host can enqueue batch N+1's plan while batch N's execute is still
+    running (plan shapes depend only on the batch size — DESIGN.md §3b)."""
     scalar = _resolve(cfg, mode)
     R = obj_ids.shape[0]
     s = s._replace(step=s.step + 1)
-    plan = plan_access(cfg, s, obj_ids)
     misses = plan.n_pages + plan.n_objs
     s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
     # pre-scope barrier analogue: refresh the recency of every target page
@@ -341,6 +345,14 @@ def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
                  scalar=scalar)
     rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
     return s, rows
+
+
+def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
+           mode: str | None = None):
+    """Batched hybrid access: plan, execute both ingress paths, profile,
+    gather.  Returns ``(state, rows[R, D])``."""
+    return execute_access(cfg, s, obj_ids, plan_access(cfg, s, obj_ids),
+                          mode=mode)
 
 
 def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
@@ -451,14 +463,14 @@ def plan_append_stream(cfg: PlaneConfig, s: st.PlaneState, which: str,
 # baseline planes on the same engine
 # --------------------------------------------------------------------------
 
-def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  *, mode: str | None = None):
-    """Fastswap-analogue plane on the batch engine: every miss takes the
-    paging plan (no PSF consultation, no CAT, no object moves)."""
+def execute_paging_access(cfg: PlaneConfig, s: st.PlaneState,
+                          obj_ids: jnp.ndarray, plan: AccessPlan, *,
+                          mode: str | None = None):
+    """Execute a Fastswap-analogue plan (built with ``split_by_psf=False``:
+    every miss takes the paging path; no CAT, no object moves)."""
     scalar = _resolve(cfg, mode)
     R = obj_ids.shape[0]
     s = s._replace(step=s.step + 1)
-    plan = plan_access(cfg, s, obj_ids, split_by_psf=False)
     s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_pages,
                                  misses=plan.n_pages))
     # page-level recency only (no card profiling — that's the point)
@@ -468,17 +480,24 @@ def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     return s, rows
 
 
-def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  reclaim_free_target: int = 2, *, mode: str | None = None,
-                  reclaim=None):
-    """AIFM-analogue plane on the batch engine: every miss object-fetches
-    through the runtime plan; after the batch the caller-supplied
-    ``reclaim`` (the object-level LRU egress loop) runs if frames are
-    tight."""
+def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  *, mode: str | None = None):
+    """Fastswap-analogue plane on the batch engine."""
+    plan = plan_access(cfg, s, obj_ids, split_by_psf=False)
+    return execute_paging_access(cfg, s, obj_ids, plan, mode=mode)
+
+
+def execute_object_access(cfg: PlaneConfig, s: st.PlaneState,
+                          obj_ids: jnp.ndarray, plan: AccessPlan,
+                          reclaim_free_target: int = 2, *,
+                          mode: str | None = None, reclaim=None):
+    """Execute an AIFM-analogue plan (built with ``all_runtime=True``:
+    every miss object-fetches through the runtime plan); afterwards the
+    caller-supplied ``reclaim`` (the object-level LRU egress loop) runs if
+    frames are tight."""
     scalar = _resolve(cfg, mode)
     R = obj_ids.shape[0]
     s = s._replace(step=s.step + 1)
-    plan = plan_access(cfg, s, obj_ids, all_runtime=True)
     s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_objs,
                                  misses=plan.n_objs))
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
@@ -490,3 +509,12 @@ def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     if reclaim is not None:
         s = reclaim(cfg, s, reclaim_free_target)
     return s, rows
+
+
+def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                  reclaim_free_target: int = 2, *, mode: str | None = None,
+                  reclaim=None):
+    """AIFM-analogue plane on the batch engine."""
+    plan = plan_access(cfg, s, obj_ids, all_runtime=True)
+    return execute_object_access(cfg, s, obj_ids, plan, reclaim_free_target,
+                                 mode=mode, reclaim=reclaim)

@@ -19,11 +19,14 @@ with the hot-set size, not the expert count.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +39,9 @@ class ExpertPlaneConfig:
     fetch_budget: int = 8   # experts fetched per step
     capacity: int = 0       # tokens per slot buffer (0 -> derive)
     dtype: object = jnp.bfloat16
+    # plan-then-execute fetch engine (mirrors KVPlaneConfig.fetch_mode):
+    fetch_mode: str = "batch"   # "batch" (vectorized) | "reference" (scalar)
+    kernel_impl: str = "auto"   # kernels.ops dispatch for the batched movers
 
 
 class ExpertPlaneState(NamedTuple):
@@ -65,23 +71,71 @@ def init(cfg: ExpertPlaneConfig) -> ExpertPlaneState:
     )
 
 
-def ensure_resident(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
-                    needed_mask: jnp.ndarray, slab_wi, slab_wg, slab_wo
-                    ) -> ExpertPlaneState:
-    """Fetch up to ``fetch_budget`` missing needed experts.  Victim slots:
-    coldest experts not needed this step (needed ones are pinned)."""
-    E, S = cfg.n_experts, cfg.hot_slots
+class ExpertFetchPlan(NamedTuple):
+    """Fixed-shape ingress plan for one decode step: one entry per fetch
+    budget slot."""
+    expert: jnp.ndarray  # [budget] int32 expert to fetch (-1 = no-op)
+    slot: jnp.ndarray    # [budget] int32 destination slot (distinct entries)
+
+
+def plan_fetch(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
+               needed_mask: jnp.ndarray) -> ExpertFetchPlan:
+    """One vectorized fetch plan: missing needed experts (up to
+    ``fetch_budget``) paired with victim slots from a single masked top-k
+    (slots hosting experts needed this step are pinned out)."""
     missing = jnp.logical_and(needed_mask, s.slot_of < 0)
     _, fetch_ids = lax.top_k(missing.astype(jnp.int32), cfg.fetch_budget)
-    fetch_valid = missing[fetch_ids]
+    expert = jnp.where(missing[fetch_ids], fetch_ids, -1).astype(jnp.int32)
 
     hosted_needed = jnp.where(s.expert_of >= 0,
                               needed_mask[jnp.maximum(s.expert_of, 0)], False)
     score = jnp.where(hosted_needed, jnp.iinfo(jnp.int32).max, s.clock)
     _, victims = lax.top_k(-score, cfg.fetch_budget)
+    return ExpertFetchPlan(expert=expert, slot=victims)
+
+
+def _exec_fetch_batch(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
+                      plan: ExpertFetchPlan, slab_wi, slab_wg, slab_wo
+                      ) -> ExpertPlaneState:
+    """Execute the plan with batched data movement: all expert weights
+    arrive via one ``kernels.gather_rows`` call per tensor (each expert is
+    one pool row — expert == page, DESIGN.md §Arch-applicability), and the
+    hot-store insert is a leading-axis scatter.  Vectorization is safe
+    because fetched experts are missing, displaced experts are resident
+    (disjoint id sets) and victim slots are distinct."""
+    E, S, d, f = cfg.n_experts, cfg.hot_slots, cfg.d_model, cfg.d_ff
+    e, slot = plan.expert, plan.slot
+    ok = e >= 0
+    # invalid entries are dropped by the masked scatter below, so the
+    # gathers skip the zero-fill pass
+    safe_e = jnp.maximum(e, 0)
+    wi = kops.gather_rows(slab_wi.reshape(E, d * f), safe_e,
+                          impl=cfg.kernel_impl, masked=False).astype(cfg.dtype)
+    wg = kops.gather_rows(slab_wg.reshape(E, d * f), safe_e,
+                          impl=cfg.kernel_impl, masked=False).astype(cfg.dtype)
+    wo = kops.gather_rows(slab_wo.reshape(E, f * d), safe_e,
+                          impl=cfg.kernel_impl, masked=False).astype(cfg.dtype)
+
+    sdst = jnp.where(ok, slot, S)                        # OOB scatter = drop
+    old = s.expert_of[slot]
+    slot_of = s.slot_of.at[jnp.where(ok & (old >= 0), old, E)].set(-1)
+    return s._replace(
+        hot_wi=s.hot_wi.reshape(S, d * f).at[sdst].set(wi).reshape(S, d, f),
+        hot_wg=s.hot_wg.reshape(S, d * f).at[sdst].set(wg).reshape(S, d, f),
+        hot_wo=s.hot_wo.reshape(S, f * d).at[sdst].set(wo).reshape(S, f, d),
+        slot_of=slot_of.at[jnp.where(ok, e, E)].set(slot),
+        expert_of=s.expert_of.at[sdst].set(e),
+        clock=s.clock.at[sdst].set(s.step))
+
+
+def _exec_fetch_reference(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
+                          plan: ExpertFetchPlan, slab_wi, slab_wg, slab_wo
+                          ) -> ExpertPlaneState:
+    """Scalar oracle: replay the identical plan one expert at a time (the
+    seed-era fetch body driven by the shared plan)."""
 
     def fetch_one(i, s):
-        e, slot, ok = fetch_ids[i], victims[i], fetch_valid[i]
+        e, slot = plan.expert[i], plan.slot[i]
 
         def do(s):
             old = s.expert_of[slot]
@@ -103,13 +157,30 @@ def ensure_resident(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
                 expert_of=s.expert_of.at[slot].set(e),
                 clock=s.clock.at[slot].set(s.step))
 
-        return lax.cond(ok, do, lambda s: s, s)
+        return lax.cond(e >= 0, do, lambda s: s, s)
 
     return lax.fori_loop(0, cfg.fetch_budget, fetch_one, s)
 
 
+def ensure_resident(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
+                    needed_mask: jnp.ndarray, slab_wi, slab_wg, slab_wo,
+                    *, mode: str | None = None) -> ExpertPlaneState:
+    """Fetch up to ``fetch_budget`` missing needed experts (plan-then-
+    execute; victim slots = coldest experts not needed this step).  ``mode``
+    selects the executor ("batch" | "reference", default
+    ``cfg.fetch_mode``); both replay the identical plan."""
+    mode = mode or cfg.fetch_mode
+    if mode not in ("batch", "reference"):
+        raise ValueError(f"unknown fetch mode: {mode!r}")
+    plan = plan_fetch(cfg, s, needed_mask)
+    if mode == "reference":
+        return _exec_fetch_reference(cfg, s, plan, slab_wi, slab_wg, slab_wo)
+    return _exec_fetch_batch(cfg, s, plan, slab_wi, slab_wg, slab_wo)
+
+
 def moe_decode(cfg: ExpertPlaneConfig, s: ExpertPlaneState, router,
-               x: jnp.ndarray, slab_wi, slab_wg, slab_wo):
+               x: jnp.ndarray, slab_wi, slab_wg, slab_wo,
+               *, mode: str | None = None):
     """x: [T, d] decode-token activations; router: [d, E].
     Returns (y [T, d], state).  Tokens whose expert could not be made
     resident within the fetch budget are dropped for that expert (their
@@ -125,7 +196,7 @@ def moe_decode(cfg: ExpertPlaneConfig, s: ExpertPlaneState, router,
     gate, expert = lax.top_k(probs, K)                    # [T, K]
 
     needed = jnp.zeros((E,), bool).at[expert.reshape(-1)].set(True)
-    s = ensure_resident(cfg, s, needed, slab_wi, slab_wg, slab_wo)
+    s = ensure_resident(cfg, s, needed, slab_wi, slab_wg, slab_wo, mode=mode)
     s = s._replace(access=s.access + needed.astype(jnp.int32),
                    clock=jnp.where(
                        jnp.where(s.expert_of >= 0,
@@ -164,3 +235,27 @@ def moe_decode(cfg: ExpertPlaneConfig, s: ExpertPlaneState, router,
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
     y = jnp.einsum("tkd,tk->td", yt, w)
     return y.astype(x.dtype), s
+
+
+# --------------------------------------------------------------------------
+# memoized serve-path jit entry points (state-donating)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jitted_moe_decode(cfg: ExpertPlaneConfig, mode: str):
+    return jax.jit(functools.partial(moe_decode, cfg, mode=mode),
+                   donate_argnums=(0,))
+
+
+def jitted_moe_decode(cfg: ExpertPlaneConfig, mode: str | None = None):
+    return _jitted_moe_decode(cfg, mode or cfg.fetch_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_ensure_resident(cfg: ExpertPlaneConfig, mode: str):
+    return jax.jit(functools.partial(ensure_resident, cfg, mode=mode),
+                   donate_argnums=(0,))
+
+
+def jitted_ensure_resident(cfg: ExpertPlaneConfig, mode: str | None = None):
+    return _jitted_ensure_resident(cfg, mode or cfg.fetch_mode)

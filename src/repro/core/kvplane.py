@@ -12,12 +12,23 @@ Two modes, matching the two ends of the paper's spectrum:
   pages; the rest live in the far tier (slab).  Each step:
     1. page summaries (kmax/kmin) are scored against q *without fetching*
        (offload-space computation, `kernels.topk_pages`);
-    2. the top-k pages are ensured local with a *static fetch budget*:
-       PSF=paging pages arrive whole (bulk DMA), PSF=runtime pages arrive
-       as a row-gather of their CAT-marked hot rows only;
+    2. the top-k pages are ensured local by the plan-then-execute fetch
+       engine: ONE vectorized plan for the whole [B, K] selection
+       (``plan_fetch``: per-seq miss ranking, cross-seq dedup, eviction
+       victims in a single masked top-k over the shared pool), then all
+       page-ins in one batched ``kernels.gather_pages`` call — PSF=paging
+       pages arrive whole (bulk DMA), PSF=runtime pages packed to their
+       CAT-marked hot rows.  ``fetch_mode="reference"`` replays the
+       identical plan through the seed-era scalar loop (the equivalence
+       oracle, see tests/test_batch_equivalence.py);
     3. paged flash attention runs over the local pool;
-    4. CAT bits are set for the attended rows, eviction victims are chosen
-       page-granularly by clock, and their PSF is recomputed from CAR.
+    4. CAT bits are set for the attended rows, and an evicted page's PSF
+       is recomputed from CAR at page-out.
+
+The serve loop should enter through ``jitted_attend_sparse`` /
+``jitted_sharded_decode``: memoized jit entry points that DONATE the plane
+state, so the (huge, unmodified) slab buffers alias through the step
+instead of being copied every call.
 
 Everything is static-shaped and vectorized: this is the form of the hybrid
 plane that lowers into the multi-pod dry-run.  The fully dynamic
@@ -51,6 +62,9 @@ class KVPlaneConfig:
     fetch_budget: int = 8     # pages ensured local per step (sparse mode)
     car_threshold: float = 0.8
     dtype: object = jnp.bfloat16
+    # plan-then-execute fetch engine (mirrors PlaneConfig.access_mode):
+    fetch_mode: str = "batch"   # "batch" (vectorized) | "reference" (scalar)
+    kernel_impl: str = "auto"   # kernels.ops dispatch for the batched movers
 
     @property
     def dense(self) -> bool:
@@ -159,107 +173,249 @@ def write_page_to_slab(cfg: KVPlaneConfig, s: KVPlaneState, b: int,
     return s._replace(k_slab=ks, v_slab=vs, kmax=kmax, kmin=kmin)
 
 
-def _evict_and_fetch(cfg: KVPlaneConfig, s: KVPlaneState, b,
-                     want_pages: jnp.ndarray, page_fill: jnp.ndarray):
-    """Ensure up to ``fetch_budget`` of ``want_pages`` (logical ids for
-    sequence ``b``) are local.  Vectorized: victims = coldest unpinned
-    frames; fetched via paging (whole page) or runtime (CAT-marked rows)
-    per the page's PSF.  ``page_fill`` [NP]: appended tokens per page
-    (bounds the valid rows of paging fetches).  Returns updated state."""
-    P, NP, F, KVH, Dh = (cfg.page_tokens, cfg.num_pages, cfg.num_frames,
-                         cfg.kv_heads, cfg.head_dim)
-    K = want_pages.shape[0]
+class KVFetchPlan(NamedTuple):
+    """Fixed-shape ingress plan for one sparse decode step: one entry per
+    (sequence, budget slot), N = batch * fetch_budget.  Shapes depend only
+    on the config, so a serving host can enqueue the next step's plan while
+    the previous step executes (see serving.engine)."""
+    seq: jnp.ndarray     # [N] int32 owning sequence
+    page: jnp.ndarray    # [N] int32 logical page to fetch (-1 = no-op)
+    victim: jnp.ndarray  # [N] int32 destination frame (distinct entries)
 
-    resident = s.page_table[b, want_pages] >= 0
-    missing = jnp.logical_and(~resident, want_pages >= 0)
-    # take the first `fetch_budget` missing pages (stable order by score rank)
-    order = jnp.argsort(~missing)                # missing first
-    fetch = jnp.where(jnp.arange(K) < cfg.fetch_budget,
-                      want_pages[order], -1)[:cfg.fetch_budget]
-    fetch = jnp.where(missing[order][:cfg.fetch_budget], fetch, -1)
 
-    # victims: coldest frames, excluding wanted-resident pages (pin analogue)
-    want_frames = jnp.where(resident, s.page_table[b, want_pages], -1)
-    pinned = jnp.zeros((F,), bool).at[jnp.maximum(want_frames, 0)].set(
-        want_frames >= 0)
+def plan_fetch(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray
+               ) -> KVFetchPlan:
+    """Build ONE vectorized fetch plan for the whole ``[B, K]`` top-page
+    selection: per-sequence hit/miss classification, first-``fetch_budget``
+    miss selection (stable score-rank order), cross-sequence dedup of the
+    flattened global page ids, and eviction victims chosen in a single
+    masked top-k over the shared frame pool (wanted-resident frames are
+    pinned out of the candidate set)."""
+    F, NP = cfg.num_frames, cfg.num_pages
+    B, K = tops.shape
+    N = B * cfg.fetch_budget
+    if N > F:
+        raise ValueError(
+            f"batch*fetch_budget={N} fetches per step need at least that "
+            f"many frames (have {F})")
+
+    valid = tops >= 0
+    safe = jnp.maximum(tops, 0)
+    frames_of = s.page_table[jnp.arange(B)[:, None], safe]       # [B, K]
+    resident = valid & (frames_of >= 0)
+    missing = valid & (frames_of < 0)
+
+    # first `fetch_budget` missing pages per sequence (stable rank order)
+    order = jnp.argsort(~missing, axis=1)                        # missing first
+    sel = jnp.take_along_axis(tops, order, axis=1)[:, :cfg.fetch_budget]
+    selm = jnp.take_along_axis(missing, order, axis=1)[:, :cfg.fetch_budget]
+    page = jnp.where(selm, sel, -1).reshape(N)
+    seq = jnp.repeat(jnp.arange(B, dtype=jnp.int32), cfg.fetch_budget)
+
+    # cross-sequence dedup on the flattened global page ids (defensive: a
+    # duplicated selection must not schedule two fetches into two frames)
+    gp = seq * NP + page
+    i = jnp.arange(N, dtype=jnp.int32)
+    ok = page >= 0
+    same = (gp[None, :] == gp[:, None]) & ok[None, :]
+    first = jnp.min(jnp.where(same, i[None, :], N), axis=1) == i
+    page = jnp.where(ok & first, page, -1)
+
+    # victims: one masked top-k over the shared pool; every wanted-resident
+    # frame is pinned (the soft-pin analogue made hard by the mask).  The
+    # coldest victims are compacted onto the VALID fetch entries — a no-op
+    # slot (a sequence with fewer misses than budget) must not absorb a
+    # cold frame while a real fetch is pushed onto a warm or pinned one.
+    pinned = jnp.zeros((F,), bool).at[
+        jnp.where(resident, frames_of, F).reshape(-1)].set(True)
     score = jnp.where(pinned, jnp.iinfo(jnp.int32).max, s.clock)
-    _, victims = lax.top_k(-score, cfg.fetch_budget)     # [budget]
+    _, victims = lax.top_k(-score, N)                            # distinct
+    ok = page >= 0
+    rank = jnp.cumsum(ok.astype(jnp.int32)) - 1
+    victim = victims[jnp.where(ok, rank, N - 1)]
+    return KVFetchPlan(seq=seq, page=page, victim=victim)
 
-    def fetch_one(i, s):
-        pg = fetch[i]
-        f = victims[i]
+
+def _evict_math(cfg: KVPlaneConfig, cat_now, old_hint, old_rows):
+    """PSF + hot-hint recomputation at page-out (shared by both executors).
+
+    KV pages are append-only and appends write through to the slab, so
+    frames are never dirty: page-out is metadata-only.  PSF is recomputed
+    from CAR over the FULL page ("would fetching the whole page have been
+    worth it?") — a packed runtime page has at most n_hot marked cards, so
+    it keeps taking the runtime path.  The hot-set snapshot maps packed
+    card bits back through the previous hint (packed slot i == i-th set bit
+    of the old hint, by stable sort)."""
+    P = cfg.page_tokens
+    car = jnp.mean(cat_now.astype(jnp.float32), axis=-1)
+    rank = jnp.cumsum(old_hint.astype(jnp.int32), axis=-1) - 1
+    packed_back = jnp.logical_and(
+        old_hint,
+        jnp.take_along_axis(cat_now, jnp.clip(rank, 0, P - 1), axis=-1))
+    was_full = old_rows >= P
+    hint = jnp.where(was_full[..., None], cat_now, packed_back)
+    return car >= cfg.car_threshold, hint
+
+
+def _ingress_math(cfg: KVPlaneConfig, psf, hot, page_fill):
+    """Fetch-path selection (shared by both executors): paging for
+    first-touch/append pages and PSF=paging pages, else a runtime packing
+    permutation that moves the CAT-marked hot rows to the front (decode
+    attention is KV-permutation-invariant)."""
+    P = cfg.page_tokens
+    n_hot = jnp.sum(hot.astype(jnp.int32), axis=-1)
+    take_paging = jnp.logical_or(psf, n_hot == 0)
+    perm = jnp.argsort(~hot, axis=-1)                    # stable: hot rows first
+    perm = jnp.where(take_paging[..., None],
+                     jnp.broadcast_to(jnp.arange(P, dtype=perm.dtype),
+                                      perm.shape), perm)
+    rows = jnp.where(take_paging, page_fill, n_hot).astype(jnp.int32)
+    return perm, rows
+
+
+def _exec_fetch_batch(cfg: KVPlaneConfig, s: KVPlaneState,
+                      plan: KVFetchPlan, fills: jnp.ndarray) -> KVPlaneState:
+    """Execute the whole plan with batched data movement: all page-outs as
+    one set of masked scatters, all page-ins (whole pages AND packed
+    hot-row fetches) as ONE ``kernels.gather_rows`` call per KV tensor.
+
+    Safe to vectorize because the plan's touched page sets are disjoint:
+    victims are distinct frames, evicted pages are currently resident,
+    fetched pages are currently missing — so every scatter below hits a
+    distinct (b, page) slot and all reads can happen against entry state
+    (bit-identical to the scalar replay, enforced by the equivalence
+    tests)."""
+    P, NP, F = cfg.page_tokens, cfg.num_pages, cfg.num_frames
+    b, pg, f = plan.seq, plan.page, plan.victim
+    N = pg.shape[0]
+    ok = pg >= 0
+    safe_pg = jnp.maximum(pg, 0)
+
+    # ---- page-out (metadata-only; egress is always page-granular) -------
+    old_gp = s.frame_page[f]                             # [N]
+    evict = ok & (old_gp >= 0)
+    old_safe = jnp.maximum(old_gp, 0)
+    old_b, old_pg = old_safe // NP, old_safe % NP
+    cat_now = s.cat[old_b, old_pg]                       # [N, P]
+    new_psf, hint = _evict_math(cfg, cat_now, s.hot_hint[old_b, old_pg],
+                                s.page_rows[old_b, old_pg])
+    eidx = jnp.where(evict, old_safe, NP * cfg.batch)   # OOB scatter = drop
+    psf = s.psf.reshape(-1).at[eidx].set(new_psf).reshape(s.psf.shape)
+    hot_hint = s.hot_hint.reshape(-1, P).at[eidx].set(hint).reshape(
+        s.hot_hint.shape)
+    cat = s.cat.reshape(-1, P).at[eidx].set(False)
+    page_rows = s.page_rows.reshape(-1).at[eidx].set(0)
+    page_table = s.page_table.reshape(-1).at[eidx].set(-1)
+
+    # ---- page-in: one batched row gather per KV tensor ------------------
+    gp_new = b * NP + safe_pg
+    perm, rows_new = _ingress_math(cfg, s.psf[b, safe_pg],
+                                   s.hot_hint[b, safe_pg],
+                                   fills[b, safe_pg])
+    # invalid entries' pages never land (their scatter index is dropped),
+    # so the gather can skip the zero-fill pass entirely
+    kpages = ops.gather_pages(s.k_slab, gp_new, perm, impl=cfg.kernel_impl,
+                              masked=False)
+    vpages = ops.gather_pages(s.v_slab, gp_new, perm, impl=cfg.kernel_impl,
+                              masked=False)
+    fdst = jnp.where(ok, f, F)
+    # frame-pool insert: leading-axis scatter on the [KVH*F, P*Dh] page
+    # view — one page-sized update window per (head, fetch), O(N) traffic
+    # (an axis-1 scatter or a full-pool rebuild both measure slower)
+    Dh = cfg.head_dim
+    fidx = jnp.where(ok[None, :], jnp.arange(cfg.kv_heads, dtype=jnp.int32
+                                             )[:, None] * F + fdst[None],
+                     cfg.kv_heads * F).reshape(-1)
+    k_frames = s.k_frames.reshape(cfg.kv_heads * F, P * Dh).at[fidx].set(
+        kpages.reshape(cfg.kv_heads * N, P * Dh)).reshape(s.k_frames.shape)
+    v_frames = s.v_frames.reshape(cfg.kv_heads * F, P * Dh).at[fidx].set(
+        vpages.reshape(cfg.kv_heads * N, P * Dh)).reshape(s.v_frames.shape)
+
+    iidx = jnp.where(ok, gp_new, NP * cfg.batch)
+    page_table = page_table.at[iidx].set(f).reshape(s.page_table.shape)
+    page_rows = page_rows.at[iidx].set(rows_new).reshape(s.page_rows.shape)
+    # CAT cleared at page-in ("accessed since last swapped in"); the
+    # profiling step marks attended rows afterwards
+    cat = cat.at[iidx].set(False).reshape(s.cat.shape)
+    frame_page = s.frame_page.at[fdst].set(gp_new)
+    clock = s.clock.at[fdst].set(s.step)
+    return s._replace(k_frames=k_frames, v_frames=v_frames,
+                      page_table=page_table, page_rows=page_rows, cat=cat,
+                      psf=psf, hot_hint=hot_hint, frame_page=frame_page,
+                      clock=clock)
+
+
+def _exec_fetch_reference(cfg: KVPlaneConfig, s: KVPlaneState,
+                          plan: KVFetchPlan, fills: jnp.ndarray
+                          ) -> KVPlaneState:
+    """Scalar oracle: replay the identical plan one fetch at a time (the
+    seed-era `_evict_and_fetch` body driven by the shared plan)."""
+    P, NP = cfg.page_tokens, cfg.num_pages
+    N = plan.page.shape[0]
+
+    def fetch_one(j, s):
+        b, pg, f = plan.seq[j], plan.page[j], plan.victim[j]
 
         def do(s):
-            # ---- page-out the victim (egress is always page-granular) ----
             old_gp = s.frame_page[f]
             old_b, old_pg = old_gp // NP, old_gp % NP
 
             def evict(s):
-                # KV pages are append-only and appends write through to the
-                # slab, so frames are never dirty: page-out is metadata-only
-                # (no writeback — and packed runtime frames must not
-                # overwrite the canonical slab layout).
-                # PSF recomputed from CAR at page-out (the Atlas policy).
-                # Denominator is the FULL page: CAR asks "would fetching the
-                # whole page have been worth it?"  A packed runtime page has
-                # at most n_hot marked cards -> CAR = n_hot/P stays below
-                # threshold -> the page keeps taking the runtime path.
-                cat_now = s.cat[old_b, old_pg]
-                car = jnp.mean(cat_now.astype(jnp.float32))
-                # snapshot the hot set for the next runtime fetch.  For a
-                # packed page, card bits refer to packed slots: map them
-                # back through the previous hint (packed slot i == i-th set
-                # bit of the old hint, by stable sort).
-                old_hint = s.hot_hint[old_b, old_pg]
-                rank = jnp.cumsum(old_hint.astype(jnp.int32)) - 1
-                packed_back = jnp.logical_and(
-                    old_hint, cat_now[jnp.clip(rank, 0, P - 1)])
-                was_full = s.page_rows[old_b, old_pg] >= P
-                hint = jnp.where(was_full, cat_now, packed_back)
+                new_psf, hint = _evict_math(
+                    cfg, s.cat[old_b, old_pg][None],
+                    s.hot_hint[old_b, old_pg][None],
+                    s.page_rows[old_b, old_pg][None])
                 return s._replace(
-                    psf=s.psf.at[old_b, old_pg].set(car >= cfg.car_threshold),
-                    hot_hint=s.hot_hint.at[old_b, old_pg].set(hint),
+                    psf=s.psf.at[old_b, old_pg].set(new_psf[0]),
+                    hot_hint=s.hot_hint.at[old_b, old_pg].set(hint[0]),
                     cat=s.cat.at[old_b, old_pg].set(False),
                     page_rows=s.page_rows.at[old_b, old_pg].set(0),
                     page_table=s.page_table.at[old_b, old_pg].set(-1))
 
             s = lax.cond(old_gp >= 0, evict, lambda s: s, s)
 
-            # ---- ingress per PSF --------------------------------------
             gp = b * NP + pg
             kpage = lax.dynamic_index_in_dim(s.k_slab, gp, 1, keepdims=False)
             vpage = lax.dynamic_index_in_dim(s.v_slab, gp, 1, keepdims=False)
-            hot = s.hot_hint[b, pg]                      # [P] runtime-path rows
-            n_hot = jnp.sum(hot.astype(jnp.int32))
-            # first-touch / append pages always take paging; else the PSF
-            take_paging = jnp.logical_or(s.psf[b, pg], n_hot == 0)
-            # runtime path: pack only the CAT-marked rows to the front of
-            # the frame (object fetching moves hot objects into contiguous
-            # local space — decode attention is KV-permutation-invariant)
-            perm = jnp.argsort(~hot)                     # hot rows first
-            kpk = jnp.take(kpage, perm, axis=1)
-            vpk = jnp.take(vpage, perm, axis=1)
-            kpage = jnp.where(take_paging, kpage, kpk)
-            vpage = jnp.where(take_paging, vpage, vpk)
-            rows = jnp.where(take_paging, page_fill[pg], n_hot).astype(jnp.int32)
+            perm, rows = _ingress_math(
+                cfg, s.psf[b, pg][None], s.hot_hint[b, pg][None],
+                fills[b, pg][None])
+            kpage = jnp.take(kpage, perm[0], axis=1)
+            vpage = jnp.take(vpage, perm[0], axis=1)
             kf = lax.dynamic_update_index_in_dim(s.k_frames, kpage, f, 1)
             vf = lax.dynamic_update_index_in_dim(s.v_frames, vpage, f, 1)
             return s._replace(
                 k_frames=kf, v_frames=vf,
                 page_table=s.page_table.at[b, pg].set(f),
-                page_rows=s.page_rows.at[b, pg].set(rows),
+                page_rows=s.page_rows.at[b, pg].set(rows[0]),
                 frame_page=s.frame_page.at[f].set(gp),
-                # CAT cleared at page-in ("accessed since last swapped in");
-                # the profiling step marks attended rows afterwards
                 cat=s.cat.at[b, pg].set(False),
                 clock=s.clock.at[f].set(s.step))
 
         return lax.cond(pg >= 0, do, lambda s: s, s)
 
-    return lax.fori_loop(0, cfg.fetch_budget, fetch_one, s)
+    return lax.fori_loop(0, N, fetch_one, s)
 
 
-def attend_sparse(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths):
+def fetch_pages(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray,
+                fills: jnp.ndarray, *, mode: str | None = None
+                ) -> KVPlaneState:
+    """Plan-then-execute ingress for a ``[B, K]`` page selection.
+
+    ``fills`` [B, NP]: appended tokens per page (bounds the valid rows of
+    paging fetches).  ``mode`` selects the executor ("batch" | "reference",
+    default ``cfg.fetch_mode``); both replay the identical plan."""
+    mode = mode or cfg.fetch_mode
+    if mode not in ("batch", "reference"):
+        raise ValueError(f"unknown fetch mode: {mode!r}")
+    plan = plan_fetch(cfg, s, tops)
+    if mode == "reference":
+        return _exec_fetch_reference(cfg, s, plan, fills)
+    return _exec_fetch_batch(cfg, s, plan, fills)
+
+
+def attend_sparse(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths, *,
+                  mode: str | None = None):
     """Hybrid sparse decode.  q: [B, H, Dh] (B = 1 per shard in long_500k).
 
     Returns (out [B, H, Dh], state)."""
@@ -288,12 +444,10 @@ def attend_sparse(cfg: KVPlaneConfig, s: KVPlaneState, q, lengths):
 
     tops = jax.vmap(seq_sel)(jnp.arange(B))              # [B, K]
 
-    # 2. ensure-local with static fetch budget (ingress via PSF)
+    # 2. ensure-local with static fetch budget (ingress via PSF): one
+    #    vectorized plan for the whole [B, K] selection, batched execution
     fills = ops.lengths_to_page_lens(lengths, NP, P)      # [B, NP]
-
-    def per_seq(b, s):
-        return _evict_and_fetch(cfg, s, b, tops[b], fills[b])
-    s = lax.fori_loop(0, B, per_seq, s)
+    s = fetch_pages(cfg, s, tops, fills, mode=mode)
 
     # 3. attention over the selected local pages only (columns = selection;
     #    per-column row counts come from page_rows — packed pages included)
@@ -379,7 +533,8 @@ def _attend_pages_partial(q, k_frames, v_frames, table, rows):
 
 
 def attend_sparse_partial(cfg: KVPlaneConfig, s: KVPlaneState, q,
-                          first_token, global_len, newest_page):
+                          first_token, global_len, newest_page, *,
+                          mode: str | None = None):
     """One shard's contribution to sharded sparse decode.
 
     ``first_token``: absolute position of this shard's first page;
@@ -412,9 +567,8 @@ def attend_sparse_partial(cfg: KVPlaneConfig, s: KVPlaneState, q,
 
     tops = jax.vmap(seq_sel)(jnp.arange(B))              # [B, K]
 
-    def per_seq(b, s):
-        return _evict_and_fetch(cfg, s, b, tops[b], page_fill)
-    s = lax.fori_loop(0, B, per_seq, s)
+    fills = jnp.broadcast_to(page_fill[None], (B, NP))
+    s = fetch_pages(cfg, s, tops, fills, mode=mode)
 
     bidx = jnp.arange(B)[:, None]
     safe_tops = jnp.maximum(tops, 0)
@@ -436,7 +590,8 @@ def attend_sparse_partial(cfg: KVPlaneConfig, s: KVPlaneState, q,
     return acc, m, l, s._replace(cat=cat, clock=clock)
 
 
-def sharded_sparse_decode(cfg: KVPlaneConfig, states, q, lengths):
+def sharded_sparse_decode(cfg: KVPlaneConfig, states, q, lengths, *,
+                          mode: str | None = None):
     """Vmapped-over-shards sparse decode with flash-decoding combine.
 
     ``states``: KVPlaneState with a leading shard axis [D, ...] (sharded
@@ -452,7 +607,8 @@ def sharded_sparse_decode(cfg: KVPlaneConfig, states, q, lengths):
                              newest_global % NP, -1).astype(jnp.int32)
 
     acc, m, l, states = jax.vmap(
-        lambda st, ft, nl: attend_sparse_partial(cfg, st, q, ft, lengths[0], nl)
+        lambda st, ft, nl: attend_sparse_partial(cfg, st, q, ft, lengths[0],
+                                                 nl, mode=mode)
     )(states, first_tokens, newest_local)
     # combine: [D, B, H, *]
     m_star = m.max(axis=0, keepdims=True)
@@ -461,6 +617,34 @@ def sharded_sparse_decode(cfg: KVPlaneConfig, states, q, lengths):
     acc_tot = (acc * w).sum(axis=0)
     out = acc_tot / jnp.maximum(l_tot, 1e-30)
     return out.astype(q.dtype), states
+
+
+# --------------------------------------------------------------------------
+# memoized serve-path jit entry points (state-donating)
+# --------------------------------------------------------------------------
+# ``jax.jit(partial(attend_sparse, cfg))`` at every call site compiles one
+# program per site AND copies the whole state (slabs included) every step —
+# the serve loop holds exactly one live state, so the step donates it and
+# the far-tier buffers alias through untouched.
+
+@functools.lru_cache(maxsize=None)
+def _jitted_attend_sparse(cfg: KVPlaneConfig, mode: str):
+    return jax.jit(functools.partial(attend_sparse, cfg, mode=mode),
+                   donate_argnums=(0,))
+
+
+def jitted_attend_sparse(cfg: KVPlaneConfig, mode: str | None = None):
+    return _jitted_attend_sparse(cfg, mode or cfg.fetch_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_sharded_decode(cfg: KVPlaneConfig, mode: str):
+    return jax.jit(functools.partial(sharded_sparse_decode, cfg, mode=mode),
+                   donate_argnums=(0,))
+
+
+def jitted_sharded_decode(cfg: KVPlaneConfig, mode: str | None = None):
+    return _jitted_sharded_decode(cfg, mode or cfg.fetch_mode)
 
 
 def append_sharded(cfg: KVPlaneConfig, states, k_new, v_new, lengths):

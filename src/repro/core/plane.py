@@ -82,6 +82,28 @@ def jitted_update(cfg: PlaneConfig, mode: str | None = None):
     return _jitted_update(cfg, mode or cfg.access_mode)
 
 
+# plan/execute split entry points: the serving engine dispatches these as
+# two device calls per batch so the host can enqueue batch N+1's plan while
+# batch N's execute runs (double-buffered dispatch, see serving.engine)
+
+@functools.lru_cache(maxsize=None)
+def _jitted_plan_access(cfg: PlaneConfig):
+    return jax.jit(partial(batch_lib.plan_access, cfg))
+
+
+def jitted_plan_access(cfg: PlaneConfig):
+    return _jitted_plan_access(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_execute_access(cfg: PlaneConfig, mode: str):
+    return jax.jit(partial(batch_lib.execute_access, cfg, mode=mode))
+
+
+def jitted_execute_access(cfg: PlaneConfig, mode: str | None = None):
+    return _jitted_execute_access(cfg, mode or cfg.access_mode)
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_evacuate(cfg: PlaneConfig, garbage_threshold: float | None,
                      max_pages: int):

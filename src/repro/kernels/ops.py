@@ -33,11 +33,41 @@ def _mode(impl: str) -> str:
     return impl
 
 
-def gather_rows(pool, idx, *, impl="auto"):
+def gather_rows(pool, idx, *, impl="auto", masked=True):
+    """pool [N, D], idx [R] -> [R, D].  With ``masked`` (default) negative
+    indices yield zero rows; ``masked=False`` skips the zero-fill pass (the
+    jnp path's extra select over the result) when the caller never consumes
+    rows at negative indices — e.g. when they are dropped by a downstream
+    masked scatter."""
     m = _mode(impl)
     if m == "ref":
+        if not masked:
+            return pool[jnp.maximum(idx, 0)]
         return ref.gather_rows_ref(pool, idx)
     return _gather_pallas(pool, idx, interpret=(m == "interpret"))
+
+
+def gather_pages(slab, page_ids, perm=None, *, impl="auto", masked=True):
+    """Multi-head page assembly in ONE batched row gather.
+
+    slab [KVH, S, P, Dh]; page_ids [N] int32 (-1 = masked, yields zero
+    pages); optional perm [N, P] row permutation applied to each fetched
+    page (the runtime path's hot-row packing) -> [KVH, N, P, Dh].
+
+    The pool is viewed page-granularly ([KVH*S, P*Dh]) so each fetched
+    page is ONE ``gather_rows`` row — one DMA descriptor per page per head,
+    all heads in a single kernel launch.  The packing permutation runs
+    locally on the fetched tile (egress from the far tier is always
+    page-granular; packing is a local-space relayout)."""
+    KVH, S, P, Dh = slab.shape
+    N = page_ids.shape[0]
+    base = jnp.arange(KVH, dtype=jnp.int32)[:, None] * S
+    idx = jnp.where(page_ids[None] >= 0, base + page_ids[None], -1)
+    pages = gather_rows(slab.reshape(KVH * S, P * Dh), idx.reshape(-1),
+                        impl=impl, masked=masked).reshape(KVH, N, P, Dh)
+    if perm is not None:
+        pages = jnp.take_along_axis(pages, perm[None, :, :, None], axis=2)
+    return pages
 
 
 def cat_update(cat_bits, vaddrs, *, page_objs: int, impl="auto"):

@@ -8,6 +8,24 @@ pacing; the engine drains them in fixed-size batches (continuous
 batching), tracks per-request latency, and periodically runs plane
 maintenance (evacuation) exactly like Atlas's concurrent evacuator.
 
+Dispatch is **plan-then-execute, double-buffered** (``dispatch=
+"pipelined"``, the default): each batch is submitted as two device calls —
+``plan_access`` (vectorized classification/dedup; its output shapes depend
+only on the batch size) and ``execute_access`` (the data movement).  The
+host never blocks at submit time: it enqueues batch N+1's plan + execute
+while batch N is still running on device, and only blocks on the oldest
+in-flight result once ``pipeline_depth`` batches are outstanding (or when
+a caller explicitly asks for rows).  ``dispatch="sync"`` retires every
+batch immediately — the serial engine the pipelined one is benchmarked
+against; both produce bit-identical rows and plane state
+(tests/test_serving.py).
+
+Latency accounting: a request's latency is charged from its *scheduled
+arrival time* (the offered-load pacing clock), not from when the engine
+got around to serving it — under saturation the queueing delay is real
+latency and is measured as such (the saturation knee of the paper's
+latency-throughput curves).
+
 Every plane runs on the plan-then-execute batch ingress engine
 (``repro.core.batch``); ``EngineConfig.mode="reference"`` swaps in the
 scalar oracle executor for debugging and equivalence runs.
@@ -17,8 +35,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from functools import partial
-from typing import Callable, Iterable, Optional
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +53,8 @@ class EngineConfig:
     evac_every: int = 64            # hybrid-plane evacuation period (ticks)
     reclaim_free_target: int = 2    # object plane
     mode: str = "batch"             # plan-then-execute engine | "reference" oracle
+    dispatch: str = "pipelined"     # "pipelined" double-buffer | "sync"
+    pipeline_depth: int = 2         # max in-flight batches before blocking
 
 
 class LatencyTracker:
@@ -60,8 +79,12 @@ class LatencyTracker:
 
 
 class Engine:
-    """Synchronous-dispatch serving engine (one device): requests are
-    drained in fixed batches through a jitted plane-access step."""
+    """Continuous-batching serving engine (one device).
+
+    ``submit`` enqueues one batch (plan + execute device calls) and returns
+    the result as an async array; ``drain`` blocks on everything still in
+    flight.  ``serve_batch`` is the synchronous convenience wrapper
+    (submit + drain + return rows)."""
 
     def __init__(self, cfg: EngineConfig, pcfg: PlaneConfig,
                  initial: jnp.ndarray):
@@ -71,53 +94,106 @@ class Engine:
         # memoized jit entry points: engines sharing a PlaneConfig share one
         # compiled executable per op (continuous batching spins up several)
         if cfg.plane == "hybrid":
-            self._access = plane_lib.jitted_access(pcfg, cfg.mode)
+            self._plan = plane_lib.jitted_plan_access(pcfg)
+            self._exec = plane_lib.jitted_execute_access(pcfg, cfg.mode)
             self._evac = plane_lib.jitted_evacuate(pcfg)
         elif cfg.plane == "paging":
-            self._access = baselines.jitted_paging_access(pcfg, cfg.mode)
+            self._plan = baselines.jitted_plan_paging(pcfg)
+            self._exec = baselines.jitted_execute_paging(pcfg, cfg.mode)
             self._evac = None
         elif cfg.plane == "object":
-            self._access = baselines.jitted_object_access(pcfg, cfg.mode)
+            self._plan = baselines.jitted_plan_object(pcfg)
+            self._exec = baselines.jitted_execute_object(pcfg, cfg.mode)
             self._evac = None
         else:
             raise ValueError(cfg.plane)
         self.latency = LatencyTracker()
         self.ticks = 0
+        self._inflight: deque = deque()     # (t_sched, rows, n) oldest-first
         # warm the compiled paths so the first request doesn't pay jit time
         warm = jnp.zeros((cfg.batch,), jnp.int32)
-        self.state, _ = self._access(self.state, warm)
+        self.state, _ = self._exec(self.state, warm, self._plan(self.state,
+                                                                warm))
         if self._evac is not None:
             self.state = self._evac(self.state)
         self.state = self.state._replace(stats=state_lib.PlaneStats.zeros())
 
-    def serve_batch(self, obj_ids: np.ndarray) -> jnp.ndarray:
-        """Serve one batch of requests; returns the rows."""
-        t_in = time.time()
-        self.state, rows = self._access(self.state,
-                                        jnp.asarray(obj_ids, jnp.int32))
-        rows.block_until_ready()
-        self.latency.record(t_in, time.time(), len(obj_ids))
+    # -- pipelined dispatch -------------------------------------------------
+
+    def submit(self, obj_ids: np.ndarray, t_sched: float | None = None):
+        """Enqueue one batch; returns its rows as an async device array.
+
+        ``t_sched``: the batch's scheduled arrival time (latency is charged
+        from here; defaults to now).  Blocks only when more than
+        ``pipeline_depth`` batches are in flight (back-pressure), never on
+        the batch being submitted."""
+        t_sched = time.time() if t_sched is None else t_sched
+        # opportunistic retirement: anything already finished on device is
+        # recorded now, so recorded latency tracks actual completion rather
+        # than when back-pressure forces a block
+        while self._inflight and self._inflight[0][1].is_ready():
+            self._retire_one()
+        ids = jnp.asarray(obj_ids, jnp.int32)
+        # two async device calls: the plan dispatch is what a sharded
+        # deployment runs host-side / on a prefetch stream
+        plan = self._plan(self.state, ids)
+        self.state, rows = self._exec(self.state, ids, plan)
+        self._inflight.append((t_sched, rows, len(obj_ids)))
         self.ticks += 1
         if self._evac is not None and self.ticks % self.cfg.evac_every == 0:
             self.state = self._evac(self.state)
+        limit = 0 if self.cfg.dispatch == "sync" else self.cfg.pipeline_depth
+        while len(self._inflight) > limit:
+            self._retire_one()
+        return rows
+
+    def _retire_one(self):
+        t_sched, rows, n = self._inflight.popleft()
+        # block only on the result actually being returned to a client
+        rows.block_until_ready()
+        self.latency.record(t_sched, time.time(), n)
+
+    def drain(self):
+        """Block on every in-flight batch (end of a workload)."""
+        while self._inflight:
+            self._retire_one()
+
+    # -- synchronous convenience wrapper ------------------------------------
+
+    def serve_batch(self, obj_ids: np.ndarray) -> jnp.ndarray:
+        """Serve one batch synchronously; returns the rows."""
+        rows = self.submit(obj_ids)
+        self.drain()
         return rows
 
     def run(self, workload: Iterable[np.ndarray],
             offered_interarrival_s: float = 0.0) -> dict:
-        """Drain a workload; optional pacing simulates offered load (queue
-        delay is charged to latency, reproducing the saturation knee of the
-        paper's latency-throughput curves)."""
-        backlog: deque = deque()
+        """Drain a workload; optional pacing simulates offered load.
+
+        With pacing, each batch's latency clock starts at its *scheduled*
+        arrival time: serving earlier is impossible, serving later (the
+        engine fell behind) counts the queueing delay — reproducing the
+        saturation knee of the paper's latency-throughput curves."""
         next_arrival = time.time()
         for batch in workload:
             if offered_interarrival_s:
-                # arrival process: batch becomes available at its scheduled
-                # time; serving earlier is impossible, later adds queueing
-                now = time.time()
-                if now < next_arrival:
-                    time.sleep(next_arrival - now)
+                t_sched = next_arrival
+                # retire finished batches while waiting for the next
+                # arrival, so recorded latency tracks device completion
+                # even when the engine is under-loaded
+                while True:
+                    now = time.time()
+                    if now >= next_arrival:
+                        break
+                    if self._inflight and self._inflight[0][1].is_ready():
+                        self._retire_one()
+                        continue
+                    time.sleep(min(2e-4, next_arrival - now))
                 next_arrival += offered_interarrival_s
-            self.serve_batch(batch)
+            else:
+                t_sched = None
+            self.submit(batch, t_sched=t_sched)
+        self.drain()
         stats = {k: int(v) for k, v in
                  jax.device_get(self.state.stats)._asdict().items()}
         return {"latency": self.latency.summary(), "stats": stats,
