@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PlaneConfig, create, jitted_access, jitted_evacuate,
+from repro.core import (PlaneConfig, create, jitted_access,
+                        jitted_advance_epoch, jitted_evacuate,
                         jitted_object_access, jitted_paging_access)
 from repro.core import plane as plane_lib
 
@@ -28,14 +29,14 @@ PAGE_OBJS = 8
 
 def plane_config(local_ratio: float, *, n_objs=N_OBJS, obj_dim=OBJ_DIM,
                  page_objs=PAGE_OBJS, car_threshold=0.8,
-                 lru_scan_budget=0) -> PlaneConfig:
+                 lru_scan_budget=0, **kw) -> PlaneConfig:
     data_pages = -(-n_objs // page_objs)
     frames = max(int(data_pages * local_ratio), 6)
     return PlaneConfig(
         num_objs=n_objs, obj_dim=obj_dim, page_objs=page_objs,
         num_frames=frames, num_vpages=data_pages * 3,
         car_threshold=car_threshold, readahead=2,
-        lru_scan_budget=lru_scan_budget)
+        lru_scan_budget=lru_scan_budget, **kw)
 
 
 def make_plane(kind: str, cfg: PlaneConfig):
@@ -53,10 +54,15 @@ def make_plane(kind: str, cfg: PlaneConfig):
 
 
 def run_workload(kind: str, cfg: PlaneConfig, workload, *,
-                 evac_every: int = 0):
-    """Returns (us_per_batch, stats_dict, final_state)."""
+                 evac_every: int = 0, epoch_every: int = 0):
+    """Returns (us_per_batch, stats_dict, final_state).
+
+    ``epoch_every`` > 0 advances the profiling epoch (CAR decay + governor
+    PSF recompute, hybrid plane only) every that many batches."""
     s, fn = make_plane(kind, cfg)
     evac = jitted_evacuate(cfg) if kind == "hybrid" else None
+    epoch = (jitted_advance_epoch(cfg)
+             if kind == "hybrid" and epoch_every else None)
     batches = list(workload)
     # warmup / compile (both the access step and the evacuator — otherwise
     # the hybrid cells mostly measure evacuate's one-off compile time)
@@ -64,15 +70,20 @@ def run_workload(kind: str, cfg: PlaneConfig, workload, *,
     out.block_until_ready()
     if evac is not None and evac_every:
         jax.block_until_ready(evac(s))  # compile cache only; state discarded
+    if epoch is not None:
+        jax.block_until_ready(epoch(s))  # compile cache only
     t0 = time.time()
     for i, ids in enumerate(batches):
         s, out = fn(s, jnp.asarray(ids))
         if evac is not None and evac_every and (i + 1) % evac_every == 0:
             s = evac(s)
+        if epoch is not None and (i + 1) % epoch_every == 0:
+            s = epoch(s)
     out.block_until_ready()
     dt = time.time() - t0
     stats = {k: int(v) for k, v in jax.device_get(s.stats)._asdict().items()}
     stats["paging_fraction"] = float(plane_lib.paging_fraction(cfg, s))
+    stats["car_thr"] = float(s.car_thr)
     return dt / len(batches) * 1e6, stats, s
 
 

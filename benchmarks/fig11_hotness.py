@@ -7,6 +7,11 @@ policy, and vs no guidance at all.
                  measures at up to 9%)
   * no-bit     — evacuator moves objects unguided (paper: ~4% fewer pages
                  end up on the paging path)
+  * atlas-epoch — atlas segregation + the epoch governor: advance_epoch
+                 decays CAR and recomputes PSF online between evacuations;
+                 the derived columns record the flips that happened with
+                 NO page-out in between (the governor acting on resident
+                 pages).
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import access, evacuate, paging_fraction
+from repro.core import access, advance_epoch, evacuate, paging_fraction
 from repro.data import kvworkload
 from .common import N_OBJS, emit, make_plane, plane_config
 
@@ -24,10 +29,12 @@ from .common import N_OBJS, emit, make_plane, plane_config
 def run(quick: bool = False):
     rows = []
     steps = 40 if quick else 120
-    for variant in ["atlas", "atlas-lru", "no-bit"]:
+    for variant in ["atlas", "atlas-lru", "no-bit", "atlas-epoch"]:
         cfg = plane_config(0.25)
         s, fn = make_plane("hybrid", cfg)
         evac = jax.jit(partial(evacuate, cfg, garbage_threshold=-1.0))
+        epoch = jax.jit(partial(advance_epoch, cfg))
+        epoch_flips = 0
         t0 = time.time()
         for i, ids in enumerate(
                 kvworkload.zipf_churn(N_OBJS, 64, steps, seed=7)):
@@ -36,6 +43,14 @@ def run(quick: bool = False):
             if variant == "atlas-lru":
                 # extra metadata maintenance: exact recency ordering
                 s = s._replace(obj_last=s.obj_last.at[ids].set(s.step))
+            if variant == "atlas-epoch" and (i + 1) % 8 == 0:
+                flips0 = int(s.stats.psf_to_paging + s.stats.psf_to_runtime)
+                outs0 = int(s.stats.page_outs)
+                s = epoch(s)
+                # flips recorded by the epoch itself: page_outs unchanged
+                assert int(s.stats.page_outs) == outs0
+                epoch_flips += int(s.stats.psf_to_paging
+                                   + s.stats.psf_to_runtime) - flips0
             if (i + 1) % 16 == 0:
                 if variant == "no-bit":
                     s = evac(s._replace(access=jnp.zeros_like(s.access)))
@@ -51,9 +66,12 @@ def run(quick: bool = False):
                 else:
                     s = evac(s)
         us = (time.time() - t0) / steps * 1e6
+        extra = (f";epoch_flips_no_pageout={epoch_flips};"
+                 f"car_thr={float(s.car_thr):.2f}"
+                 if variant == "atlas-epoch" else "")
         rows.append((f"fig11/hotness/{variant}", us,
                      f"paging_frac={float(paging_fraction(cfg, s)):.3f};"
-                     f"evac_moved={int(s.stats.evac_moved)}"))
+                     f"evac_moved={int(s.stats.evac_moved)}" + extra))
     emit(rows)
     return rows
 

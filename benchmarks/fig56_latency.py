@@ -34,7 +34,14 @@ LOAD_FACTOR = 0.7
 
 def _mk(plane, dispatch, pcfg):
     data = jnp.zeros((pcfg.num_objs, pcfg.obj_dim))
-    return Engine(EngineConfig(plane=plane, batch=64, dispatch=dispatch),
+    # "pipelined+bgevac": same double-buffered dispatch, but evacuation is
+    # sliced into the dispatch gaps (evac_budget pages per gap) instead of
+    # one blocking 16-page foreground compaction per round — the paper's
+    # concurrent-evacuator tail-latency discipline.  evac_every=16 so the
+    # foreground rounds actually fire inside the quick run.
+    kw = (dict(dispatch="pipelined", evac_budget=4)
+          if dispatch == "pipelined+bgevac" else dict(dispatch=dispatch))
+    return Engine(EngineConfig(plane=plane, batch=64, evac_every=16, **kw),
                   pcfg, data)
 
 
@@ -50,7 +57,10 @@ def run(quick: bool = False):
             # process pinned relative to this plane's own service rate
             interarrival = calibrate_service_time(
                 pcfg, plane, gen_fn, 64) * LOAD_FACTOR
-            for dispatch in ["sync", "pipelined"]:
+            modes = ["sync", "pipelined"]
+            if plane == "hybrid":
+                modes.append("pipelined+bgevac")
+            for dispatch in modes:
                 # unpaced saturation drain -> throughput
                 eng = _mk(plane, dispatch, pcfg)
                 t0 = time.time()

@@ -1,0 +1,73 @@
+"""Prefetch-policy smoke cell: sequential window vs Leap-style
+majority-trend stride voting (coverage / accuracy / wasted-fetch ratio).
+
+A strided page scan is the regime Leap built the majority vote for: the
+kernel-style sequential window (``prefetch="sequential"``, the seed
+readahead policy in plan form) prefetches ``v+1..v+readahead`` and wastes
+every fetch once the true stride exceeds the window, while the majority
+detector recovers the stride from the deduped miss stream and extrapolates
+along the trend.  Stride 1 is the sanity case where both policies should
+cover.
+
+Columns (from ``PlaneStats``):
+  * ``accuracy``  = prefetch_used / prefetch_issued
+  * ``coverage``  = prefetch_used / (prefetch_used + demand page-ins)
+                    — the fraction of would-be paging misses the prefetcher
+                    absorbed after warmup
+  * ``wasted``    = 1 - accuracy (upper bound: still-resident unread
+                    prefetches count as wasted)
+
+Cells run the paging baseline (no PSF gating — pure prefetcher policy) and
+one hybrid cell (PSF-masked majority prefetch on the churn workload).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import kvworkload
+from .common import N_OBJS, PAGE_OBJS, emit, plane_config, run_workload
+
+
+def stride_scan(n_objs, batch, steps, stride_pages, page_objs=PAGE_OBJS,
+                seed=0):
+    """One object per page, pages marching by ``stride_pages`` — the
+    deduped miss stream is an arithmetic page sequence."""
+    npages = n_objs // page_objs
+    pos = 0
+    for i in range(steps):
+        pages = (pos + np.arange(batch) * stride_pages) % npages
+        yield (pages * page_objs + (i % page_objs)).astype(np.int32)
+        pos = (pos + batch * stride_pages) % npages
+
+
+def _derived(stats):
+    issued = stats["prefetch_issued"]
+    used = stats["prefetch_used"]
+    demand = stats["page_ins"] - issued
+    acc = used / issued if issued else 0.0
+    cov = used / (used + demand) if (used + demand) else 0.0
+    return (f"issued={issued};used={used};accuracy={acc:.2f};"
+            f"coverage={cov:.2f};wasted={1 - acc:.2f}")
+
+
+def run(quick: bool = False):
+    rows = []
+    steps = 30 if quick else 80
+    for stride in [1, 3]:
+        for mode in ["sequential", "majority"]:
+            cfg = plane_config(0.25, prefetch=mode, prefetch_budget=8)
+            gen = stride_scan(N_OBJS, 8, steps, stride)
+            us, stats, _ = run_workload("paging", cfg, gen)
+            rows.append((f"fig_prefetch/stride{stride}/{mode}", us,
+                         _derived(stats)))
+    # hybrid plane: PSF-masked majority prefetch on the churn workload
+    cfg = plane_config(0.25, prefetch="majority", prefetch_budget=8)
+    gen = kvworkload.zipf_churn(N_OBJS, 64, steps, seed=8)
+    us, stats, _ = run_workload("hybrid", cfg, gen, evac_every=16)
+    rows.append(("fig_prefetch/hybrid_churn/majority", us, _derived(stats)))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -15,9 +15,12 @@ Public surface:
 from .layout import (FREE, LOCAL, REMOTE, PSF_PAGING, PSF_RUNTIME,
                      PlaneConfig)
 from .state import PlaneState, PlaneStats, create
-from .plane import (access, update, evacuate, writeback_all, evict_all,
-                    peek, occupancy, paging_fraction, check_invariants,
-                    jitted_access, jitted_update, jitted_evacuate,
+from .plane import (access, update, evacuate, plan_evacuate,
+                    execute_evacuate, advance_epoch, writeback_all,
+                    evict_all, peek, occupancy, paging_fraction,
+                    check_invariants, jitted_access, jitted_update,
+                    jitted_evacuate, jitted_plan_evacuate,
+                    jitted_execute_evacuate, jitted_advance_epoch,
                     jitted_plan_access, jitted_execute_access)
 from .baselines import (paging_access, object_access, object_reclaim,
                         jitted_paging_access, jitted_object_access,
@@ -28,10 +31,13 @@ from . import batch, sync, offload
 __all__ = [
     "FREE", "LOCAL", "REMOTE", "PSF_PAGING", "PSF_RUNTIME", "PlaneConfig",
     "PlaneState", "PlaneStats", "create",
-    "access", "update", "evacuate", "writeback_all", "evict_all",
+    "access", "update", "evacuate", "plan_evacuate", "execute_evacuate",
+    "advance_epoch", "writeback_all", "evict_all",
     "peek", "occupancy", "paging_fraction", "check_invariants",
     "paging_access", "object_access", "object_reclaim",
     "jitted_access", "jitted_update", "jitted_evacuate",
+    "jitted_plan_evacuate", "jitted_execute_evacuate",
+    "jitted_advance_epoch",
     "jitted_plan_access", "jitted_execute_access",
     "jitted_paging_access", "jitted_object_access",
     "jitted_plan_paging", "jitted_execute_paging",

@@ -108,6 +108,7 @@ def _append_obj_remote(cfg: PlaneConfig, s: st.PlaneState, o, row) -> st.PlaneSt
             alloc_count=s.alloc_count.at[v].set(0),
             live_count=s.live_count.at[v].set(0),
             obj_of=s.obj_of.at[v].set(-1),
+            car_ema=s.car_ema.at[v].set(0.0),   # fresh page identity
             remote_fill_vpage=v,
         )
         return paths.pin_page(s, v)

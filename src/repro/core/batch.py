@@ -9,11 +9,19 @@ module replaces it with a three-stage engine:
      request hit/miss against the batch-entry state, split misses by the
      page's PSF, and dedup — paging misses per *page*, runtime misses per
      *object* — in first-appearance order (sort/unique-style masking).
-  2. **Execute** (page-granular, sequential only where eviction decisions
-     are inherently ordered):
-       * *paging plan*  — one ``page_in_with_readahead`` per deduped victim
-         page (a dynamic-trip-count loop over the deduped plan, not the
-         request batch),
+     The paging plan then grows a **prefetch-candidate section** (Leap-style
+     majority-vote stride detection over the deduped miss stream, or the
+     seed sequential window — ``cfg.prefetch``), deduped, PSF-masked and
+     capped by the static ``cfg.prefetch_budget``, and every planned fetch
+     (demand + prefetch) is paired with an eviction **victim frame** chosen
+     in one masked top-k over the frame pool (free frames first, then
+     coldest unpinned; frames holding this batch's target pages only under
+     extreme pressure; prefetches never evict a target).
+  2. **Execute** (all vectorized):
+       * *paging plan*  — every page-out as masked scatters (write-back,
+         PSF-from-CAR, CAT clear) and every page-in — demand and prefetch
+         alike — in ONE batched ``kernels.gather_pages`` call; no
+         per-victim ``fori_loop``/``cond`` chain,
        * *runtime plan* — fill-page capacity is computed with prefix
          arithmetic, fresh log pages are allocated up front, and the rows
          themselves move in ONE batched ``kernels.gather_rows`` +
@@ -51,6 +59,8 @@ from . import paths
 from . import state as st
 from .layout import FREE, LOCAL, REMOTE, PlaneConfig
 
+INF32 = jnp.iinfo(jnp.int32).max
+
 
 # --------------------------------------------------------------------------
 # planning primitives (vectorized dedup / classification)
@@ -77,26 +87,131 @@ def _compact(keys: jnp.ndarray, first: jnp.ndarray):
     return plan, jnp.sum(first.astype(jnp.int32))
 
 
+def majority_stride(d: jnp.ndarray, n_d: jnp.ndarray):
+    """Leap-style majority vote over the first ``n_d`` entries of the delta
+    sequence ``d``: the dominant delta wins an absolute majority, else the
+    most recent delta is the fallback (as in Leap).  Returns
+    ``(stride, have)`` — ``have`` is False when there is no usable trend
+    (no deltas, or a zero stride).  Shared by the core paging planner and
+    the kvplane decode lookahead."""
+    N = d.shape[0]
+    dvalid = jnp.arange(N) < n_d
+    same = (d[None, :] == d[:, None]) & dvalid[None, :]
+    counts = jnp.where(dvalid, jnp.sum(same.astype(jnp.int32), axis=1), 0)
+    best = jnp.argmax(counts).astype(jnp.int32)
+    majority = counts[best] * 2 > n_d
+    last = d[jnp.clip(n_d - 1, 0, N - 1)]
+    stride = jnp.where(majority, d[best], last)
+    return stride, (n_d >= 1) & (stride != 0)
+
+
 class AccessPlan(NamedTuple):
     """Fixed-shape pytree describing one batch's ingress work.  Because the
-    shapes depend only on the batch size, a future sharded plane can compute
-    the next batch's plan on host while the previous one executes."""
+    shapes depend only on the batch size (and the static prefetch budget),
+    a sharded plane can compute the next batch's plan on host while the
+    previous one executes.
+
+    The paging section is fully resolved at plan time: ``pg_fetch`` lists
+    every page-in to perform — the deduped demand misses followed by the
+    prefetch-candidate section — and ``pg_victim`` pairs each with the
+    frame it lands in (chosen by one masked top-k over the pool; a fetch
+    with no usable victim is dropped to ``-1``).  The executors never make
+    another eviction decision."""
 
     vpage: jnp.ndarray      # [R] entry vpages (soft-pin / recency targets)
     page_plan: jnp.ndarray  # [R] deduped paging-miss pages (-1 pad)
     n_pages: jnp.ndarray    # [] number of valid entries in page_plan
     obj_plan: jnp.ndarray   # [R] deduped runtime-miss objects (-1 pad)
     n_objs: jnp.ndarray     # [] number of valid entries in obj_plan
+    pg_fetch: jnp.ndarray   # [R+Q] scheduled page-ins, demand++prefetch (-1)
+    pg_victim: jnp.ndarray  # [R+Q] destination frame per scheduled fetch
+    pg_is_pf: jnp.ndarray   # [R+Q] bool: entry belongs to the prefetch section
+
+
+def _prefetch_candidates(cfg: PlaneConfig, s: st.PlaneState,
+                         page_plan: jnp.ndarray, n_pages: jnp.ndarray,
+                         *, use_psf: bool) -> jnp.ndarray:
+    """Build the prefetch-candidate section of the paging plan: ``[Q]``
+    pages (-1 pad), deduped, bounds/backing checked, PSF-masked (hybrid
+    only) and disjoint from the demand plan.
+
+    ``prefetch="sequential"`` is the seed readahead policy in plan form:
+    each demand miss contributes its following ``cfg.readahead`` pages, in
+    (miss order, offset) priority.  ``prefetch="majority"`` is the
+    Leap-style detector: a majority vote over the deltas of the deduped
+    miss stream picks the dominant stride (falling back to the most recent
+    delta when no majority exists, as in Leap), and candidates extrapolate
+    that trend from the last miss."""
+    V, Q, R = cfg.num_vpages, cfg.prefetch_budget, page_plan.shape[0]
+    none = jnp.full((Q,), -1, jnp.int32)
+    if cfg.prefetch == "sequential":
+        if cfg.readahead <= 0:
+            return none
+        off = jnp.arange(1, cfg.readahead + 1, dtype=jnp.int32)
+        cand = jnp.where(page_plan[:, None] >= 0,
+                         page_plan[:, None] + off[None, :], -1).reshape(-1)
+    else:  # "majority"
+        if R < 2:
+            return none
+        stride, have = majority_stride(page_plan[1:] - page_plan[:-1],
+                                       jnp.maximum(n_pages - 1, 0))
+        base = page_plan[jnp.clip(n_pages - 1, 0, R - 1)]
+        k = jnp.arange(1, Q + 1, dtype=jnp.int32)
+        cand = jnp.where(have, base + k * stride, -1)
+    ok = (cand >= 0) & (cand < V)
+    safe = jnp.clip(cand, 0, V - 1)
+    ok &= s.backing[safe] == REMOTE          # allocated and currently far
+    if use_psf:
+        ok &= s.psf[safe]                    # only paging-path pages
+    ok &= ~jnp.any(cand[:, None] == page_plan[None, :], axis=1)
+    cand = jnp.where(ok, cand, -1)
+    plan, _ = _compact(cand, _first_of(cand, ok))
+    return plan[:Q]
+
+
+def _plan_victims(cfg: PlaneConfig, s: st.PlaneState, req_v: jnp.ndarray,
+                  fetch: jnp.ndarray, is_pf: jnp.ndarray):
+    """Pair every scheduled fetch with a destination frame in ONE masked
+    top-k over the frame pool: free frames first (index order), then the
+    coldest unpinned occupied frames by entry clock.  Frames holding this
+    batch's target pages rank last (the soft-pin: evicted only under
+    extreme pressure, and never for a prefetch); pinned frames never.
+    Fetches beyond the usable pool are dropped (-1) — prefetches first,
+    since the demand section precedes them in rank order."""
+    F, V = cfg.num_frames, cfg.num_vpages
+    N = fetch.shape[0]
+    occ = s.vpage_of >= 0
+    vres = jnp.maximum(s.vpage_of, 0)
+    pinned = occ & (s.pin[vres] > 0)
+    target = jnp.zeros((V,), bool).at[req_v].set(True)
+    is_tgt = occ & target[vres]
+    score = jnp.where(~occ, -INF32,
+                      jnp.where(pinned, INF32,
+                                jnp.where(is_tgt, INF32 - 1, s.clock[vres])))
+    k = min(N, F)
+    neg, victims = lax.top_k(-score, k)          # ascending-score frames
+    vic_score = -neg
+    ok = fetch >= 0
+    rank = jnp.cumsum(ok.astype(jnp.int32)) - 1
+    r = jnp.clip(rank, 0, k - 1)
+    vs = vic_score[r]
+    usable = ok & (rank < k) & (vs < INF32) & (~is_pf | (vs < INF32 - 1))
+    return (jnp.where(usable, fetch, -1),
+            jnp.where(usable, victims[r], -1))
 
 
 def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                 *, split_by_psf: bool = True, all_runtime: bool = False
                 ) -> AccessPlan:
-    """Classify the batch and build the two ingress plans.
+    """Classify the batch and build the two ingress plans (plus the paging
+    plan's prefetch section and victim assignment).
 
     ``split_by_psf=False`` sends every miss down the paging plan (Fastswap
-    baseline); ``all_runtime=True`` sends every miss down the runtime plan
-    (AIFM baseline)."""
+    baseline; its prefetch section skips the PSF mask — no PSF
+    consultation is the point); ``all_runtime=True`` sends every miss down
+    the runtime plan (AIFM baseline; no paging section at all)."""
+    R = obj_ids.shape[0]
+    Q = cfg.prefetch_budget
     vaddr = s.obj_loc[obj_ids]
     v = vaddr // cfg.page_objs
     local = s.backing[v] == LOCAL
@@ -112,29 +227,137 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
         rt_mask = jnp.zeros_like(local)
     page_plan, n_pages = _compact(v, _first_of(v, pg_mask))
     obj_plan, n_objs = _compact(obj_ids, _first_of(obj_ids, rt_mask))
-    return AccessPlan(v, page_plan, n_pages, obj_plan, n_objs)
+    # Capacity governor for the runtime plan: fresh log pages allocate with
+    # pin-masked LRU eviction, so when standing pins (allocation cursors)
+    # occupy almost the whole pool, an unbounded move list could force the
+    # allocator to evict a pinned cursor with appends still pending — the
+    # corruption the seed's "callers bound pins per batch" note waved away.
+    # Cap the moves so every fresh-page allocation still finds an unpinned
+    # victim; excess miss objects simply stay remote this batch (the final
+    # gather serves them from the slab — results stay ground truth).
+    occ_f = s.vpage_of >= 0
+    pinned_frames = jnp.sum(
+        (occ_f & (s.pin[jnp.maximum(s.vpage_of, 0)] > 0)).astype(jnp.int32))
+    fill = s.fill_vpage
+    free_slots = jnp.where(fill >= 0,
+                           cfg.page_objs
+                           - s.alloc_count[jnp.maximum(fill, 0)], 0)
+    cap = free_slots + cfg.page_objs * jnp.maximum(
+        cfg.num_frames - pinned_frames, 0)
+    n_objs = jnp.minimum(n_objs, cap)
+    obj_plan = jnp.where(jnp.arange(R) < n_objs, obj_plan, -1)
+    if all_runtime:
+        pf_plan = jnp.full((Q,), -1, jnp.int32)
+    else:
+        pf_plan = _prefetch_candidates(cfg, s, page_plan, n_pages,
+                                       use_psf=split_by_psf)
+    fetch = jnp.concatenate([page_plan, pf_plan])
+    is_pf = jnp.concatenate([jnp.zeros((R,), bool), jnp.ones((Q,), bool)])
+    fetch, victim = _plan_victims(cfg, s, v, fetch, is_pf)
+    return AccessPlan(v, page_plan, n_pages, obj_plan, n_objs,
+                      fetch, victim, is_pf)
 
 
 # --------------------------------------------------------------------------
 # execution: paging plan
 # --------------------------------------------------------------------------
 
-def _exec_paging(cfg: PlaneConfig, s: st.PlaneState, plan: AccessPlan
-                 ) -> st.PlaneState:
-    """Fault in the deduped miss pages.  Sequential over *pages* (each
-    page-in may evict, and eviction decisions are ordered), but the trip
-    count is the deduped page count, not the request count."""
+def _exec_paging(cfg: PlaneConfig, s: st.PlaneState, plan: AccessPlan, *,
+                 scalar: bool) -> st.PlaneState:
+    """Execute the planned page-ins (demand + prefetch).
 
-    def body(i, s):
-        v = jnp.maximum(plan.page_plan[i], 0)
-        # a page later in the plan may have been pulled in by an earlier
-        # page's readahead window — skip it
-        still_remote = s.backing[v] == REMOTE
-        return lax.cond(still_remote,
-                        lambda s: paths.page_in_with_readahead(cfg, s, v),
-                        lambda s: s, s)
+    The batched executor performs every page-out as masked scatters
+    (write-back, PSF-from-CAR, CAT clear) and every page-in with ONE
+    ``kernels.gather_pages`` call over the slab's page view, then one
+    frame-pool scatter — no per-victim ``fori_loop``/``cond`` chain.  Safe
+    because the plan's touched sets are disjoint: victims are distinct
+    frames (top-k), evicted pages are currently resident, fetched pages
+    are currently remote.  The scalar executor replays the identical plan
+    one fetch at a time through the ``paths`` helpers — the equivalence
+    oracle, bit-identical by the same disjointness."""
+    P, V, F, D = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.obj_dim
+    fetch, vic, is_pf = plan.pg_fetch, plan.pg_victim, plan.pg_is_pf
+    N = fetch.shape[0]
+    ok = fetch >= 0
 
-    return lax.fori_loop(0, plan.n_pages, body, s)
+    if scalar:
+        def body(j, s):
+            def do(s):
+                f = vic[j]
+                s = lax.cond(s.vpage_of[f] >= 0,
+                             lambda s: paths.page_out(cfg, s, f),
+                             lambda s: s, s)
+                s = paths.page_in_at(cfg, s, fetch[j], f)
+
+                def mark(s):
+                    return s._replace(
+                        prefetched=s.prefetched.at[fetch[j]].set(True),
+                        stats=st.bump(s.stats, prefetch_issued=1))
+
+                return lax.cond(is_pf[j], mark, lambda s: s, s)
+
+            return lax.cond(ok[j], do, lambda s: s, s)
+
+        return lax.fori_loop(0, N, body, s)
+
+    # ---- page-out: masked scatters over the distinct victim set ---------
+    vf = jnp.maximum(vic, 0)
+    old_v = jnp.where(ok, s.vpage_of[vf], -1)
+    evict = ok & (old_v >= 0)
+    ovs = jnp.maximum(old_v, 0)
+    ov = jnp.where(evict, old_v, V)              # OOB scatter index = drop
+    car_inst = (jnp.sum(s.cat[ovs].astype(jnp.int32), axis=1).astype(
+        jnp.float32) / jnp.maximum(s.alloc_count[ovs], 1).astype(jnp.float32))
+    car = jnp.maximum(car_inst, s.car_ema[ovs])  # EMA blend (see paths.page_out)
+    new_psf = car >= s.car_thr
+    old_psf = s.psf[ovs]
+    flip_p = jnp.sum((evict & ~old_psf & new_psf).astype(jnp.int32))
+    flip_r = jnp.sum((evict & old_psf & ~new_psf).astype(jnp.int32))
+    n_dirty = jnp.sum((evict & s.dirty[ovs]).astype(jnp.int32))
+    slab = s.slab.at[ov].set(s.frames[vf])       # unconditional write-back
+    psf = s.psf.at[ov].set(new_psf)
+    cat = s.cat.at[ov].set(False)
+    backing = s.backing.at[ov].set(jnp.int8(REMOTE))
+    frame_of = s.frame_of.at[ov].set(-1)
+    dirty = s.dirty.at[ov].set(False)
+    prefetched = s.prefetched.at[ov].set(False)  # unread prefetch wasted
+
+    # ---- page-in: ONE batched gather over the slab page view ------------
+    vin = jnp.where(ok, fetch, V)
+    pages = kops.gather_pages(slab[None], jnp.where(ok, fetch, -1),
+                              impl=cfg.kernel_impl, masked=False)[0]
+    fdst = jnp.where(ok, vic, F)
+    frames = s.frames.at[fdst].set(pages)
+    backing = backing.at[vin].set(jnp.int8(LOCAL))
+    frame_of = frame_of.at[vin].set(vic)
+    vpage_of = s.vpage_of.at[fdst].set(jnp.where(ok, fetch, -1))
+    cat = cat.at[vin].set(False)
+    clock = s.clock.at[vin].set(s.step)
+    prefetched = prefetched.at[vin].set(is_pf)
+    return s._replace(
+        slab=slab, frames=frames, backing=backing, frame_of=frame_of,
+        vpage_of=vpage_of, cat=cat, psf=psf, dirty=dirty, clock=clock,
+        prefetched=prefetched,
+        stats=st.bump(
+            s.stats,
+            page_ins=jnp.sum(ok.astype(jnp.int32)),
+            page_outs=jnp.sum(evict.astype(jnp.int32)),
+            dirty_page_outs=n_dirty, psf_to_paging=flip_p,
+            psf_to_runtime=flip_r,
+            prefetch_issued=jnp.sum((ok & is_pf).astype(jnp.int32))))
+
+
+def _account_prefetch_hits(cfg: PlaneConfig, s: st.PlaneState,
+                           plan: AccessPlan) -> st.PlaneState:
+    """Coverage accounting against batch-entry state: a demand access to a
+    page whose ``prefetched`` bit is standing means that prefetch turned a
+    would-be miss into a hit.  Mode-independent (pure vectorized), so both
+    executors agree."""
+    used = (jnp.zeros((cfg.num_vpages,), bool).at[plan.vpage].set(True)
+            & s.prefetched)
+    n_used = jnp.sum(used.astype(jnp.int32))
+    return s._replace(prefetched=s.prefetched & ~used,
+                      stats=st.bump(s.stats, prefetch_used=n_used))
 
 
 # --------------------------------------------------------------------------
@@ -339,7 +562,8 @@ def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     # so mid-batch eviction prefers non-target pages (soft pin; the hard
     # deref-count pins stay host-side, see sync.py)
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
-    s = _exec_paging(cfg, s, plan)
+    s = _account_prefetch_hits(cfg, s, plan)
+    s = _exec_paging(cfg, s, plan, scalar=scalar)
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
     s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
                  scalar=scalar)
@@ -368,7 +592,8 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     misses = plan.n_pages + plan.n_objs
     s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
-    s = _exec_paging(cfg, s, plan)
+    s = _account_prefetch_hits(cfg, s, plan)
+    s = _exec_paging(cfg, s, plan, scalar=scalar)
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
     s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
                  scalar=scalar)
@@ -475,7 +700,8 @@ def execute_paging_access(cfg: PlaneConfig, s: st.PlaneState,
                                  misses=plan.n_pages))
     # page-level recency only (no card profiling — that's the point)
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
-    s = _exec_paging(cfg, s, plan)
+    s = _account_prefetch_hits(cfg, s, plan)
+    s = _exec_paging(cfg, s, plan, scalar=scalar)
     rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
     return s, rows
 

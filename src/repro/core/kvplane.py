@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import batch as batch_lib
 from repro.kernels import ops
 
 NEG_INF = -1e30
@@ -65,10 +66,20 @@ class KVPlaneConfig:
     # plan-then-execute fetch engine (mirrors PlaneConfig.access_mode):
     fetch_mode: str = "batch"   # "batch" (vectorized) | "reference" (scalar)
     kernel_impl: str = "auto"   # kernels.ops dispatch for the batched movers
+    # decode lookahead (mirrors PlaneConfig.prefetch): extend the fetch plan
+    # with pages the top-page trajectory is trending toward
+    prefetch: str = "none"      # "none" | "sequential" | "majority"
+    prefetch_budget: int = 0    # lookahead pages planned per sequence
 
     @property
     def dense(self) -> bool:
         return self.sparse_topk == 0
+
+    @property
+    def plan_entries(self) -> int:
+        """Fetch-plan length: demand budget + lookahead, per sequence."""
+        pf = self.prefetch_budget if self.prefetch != "none" else 0
+        return self.batch * (self.fetch_budget + pf)
 
 
 class KVPlaneState(NamedTuple):
@@ -183,21 +194,65 @@ class KVFetchPlan(NamedTuple):
     victim: jnp.ndarray  # [N] int32 destination frame (distinct entries)
 
 
+def _lookahead_candidates(cfg: KVPlaneConfig, s: KVPlaneState,
+                          tops: jnp.ndarray) -> jnp.ndarray:
+    """Decode-lookahead section of the fetch plan: ``[B, Qp]`` pages the
+    top-page trajectory is trending toward (-1 pad).
+
+    ``prefetch="sequential"`` extrapolates past the newest selected page
+    (decode appends march forward).  ``prefetch="majority"`` runs the
+    Leap-style vote over the deltas of the (sorted) selected pages — a
+    strided retrieval pattern extrapolates along its dominant stride, with
+    the most recent delta as the no-majority fallback.  Candidates are
+    masked to valid, currently-missing, PSF=paging pages not already in
+    the selection (a packed runtime-path page is cheaper to fetch on
+    demand than to page in whole speculatively)."""
+    B, K = tops.shape
+    NP, Qp = cfg.num_pages, cfg.prefetch_budget
+
+    def per_seq(b):
+        sel = tops[b]
+        valid = sel >= 0
+        nv = jnp.sum(valid.astype(jnp.int32))
+        srt = jnp.sort(jnp.where(valid, sel, jnp.iinfo(jnp.int32).max))
+        if cfg.prefetch == "sequential":
+            stride = jnp.asarray(1, jnp.int32)
+            have = nv >= 1
+        else:  # "majority"
+            stride, have = batch_lib.majority_stride(
+                srt[1:] - srt[:-1], jnp.maximum(nv - 1, 0))
+        base = srt[jnp.clip(nv - 1, 0, K - 1)]
+        k = jnp.arange(1, Qp + 1, dtype=jnp.int32)
+        cand = jnp.where(have, base + k * stride, -1)
+        ok = (cand >= 0) & (cand < NP)
+        safe = jnp.clip(cand, 0, NP - 1)
+        ok &= s.page_table[b, safe] < 0          # currently missing
+        ok &= s.psf[b, safe]                     # PSF mask: paging pages only
+        ok &= ~jnp.any(cand[:, None] == sel[None, :], axis=1)
+        return jnp.where(ok, cand, -1)
+
+    return jax.vmap(per_seq)(jnp.arange(B))
+
+
 def plan_fetch(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray
                ) -> KVFetchPlan:
     """Build ONE vectorized fetch plan for the whole ``[B, K]`` top-page
     selection: per-sequence hit/miss classification, first-``fetch_budget``
-    miss selection (stable score-rank order), cross-sequence dedup of the
+    miss selection (stable score-rank order), an optional decode-lookahead
+    section (``cfg.prefetch``/``cfg.prefetch_budget`` — the same planner
+    discipline as ``batch.plan_access``), cross-sequence dedup of the
     flattened global page ids, and eviction victims chosen in a single
     masked top-k over the shared frame pool (wanted-resident frames are
-    pinned out of the candidate set)."""
+    pinned out of the candidate set; a fetch with no unpinned victim left
+    is dropped, lookahead entries first since they rank last)."""
     F, NP = cfg.num_frames, cfg.num_pages
     B, K = tops.shape
-    N = B * cfg.fetch_budget
+    Qp = cfg.prefetch_budget if cfg.prefetch != "none" else 0
+    N = cfg.plan_entries
     if N > F:
         raise ValueError(
-            f"batch*fetch_budget={N} fetches per step need at least that "
-            f"many frames (have {F})")
+            f"batch*(fetch_budget+prefetch_budget)={N} fetches per step "
+            f"need at least that many frames (have {F})")
 
     valid = tops >= 0
     safe = jnp.maximum(tops, 0)
@@ -209,8 +264,17 @@ def plan_fetch(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray
     order = jnp.argsort(~missing, axis=1)                        # missing first
     sel = jnp.take_along_axis(tops, order, axis=1)[:, :cfg.fetch_budget]
     selm = jnp.take_along_axis(missing, order, axis=1)[:, :cfg.fetch_budget]
-    page = jnp.where(selm, sel, -1).reshape(N)
+    page = jnp.where(selm, sel, -1).reshape(B * cfg.fetch_budget)
     seq = jnp.repeat(jnp.arange(B, dtype=jnp.int32), cfg.fetch_budget)
+    if Qp:
+        # ALL demand entries precede ALL lookahead entries in the flat
+        # plan, so rank-ordered victim assignment (and the drop-on-
+        # pressure tail) favors every sequence's demand over any
+        # sequence's speculation
+        page = jnp.concatenate(
+            [page, _lookahead_candidates(cfg, s, tops).reshape(B * Qp)])
+        seq = jnp.concatenate(
+            [seq, jnp.repeat(jnp.arange(B, dtype=jnp.int32), Qp)])
 
     # cross-sequence dedup on the flattened global page ids (defensive: a
     # duplicated selection must not schedule two fetches into two frames)
@@ -226,13 +290,17 @@ def plan_fetch(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray
     # coldest victims are compacted onto the VALID fetch entries — a no-op
     # slot (a sequence with fewer misses than budget) must not absorb a
     # cold frame while a real fetch is pushed onto a warm or pinned one.
+    # A fetch whose victim would be pinned is dropped instead of executed.
+    INF = jnp.iinfo(jnp.int32).max
     pinned = jnp.zeros((F,), bool).at[
         jnp.where(resident, frames_of, F).reshape(-1)].set(True)
-    score = jnp.where(pinned, jnp.iinfo(jnp.int32).max, s.clock)
-    _, victims = lax.top_k(-score, N)                            # distinct
+    score = jnp.where(pinned, INF, s.clock)
+    neg, victims = lax.top_k(-score, N)                          # distinct
     ok = page >= 0
     rank = jnp.cumsum(ok.astype(jnp.int32)) - 1
-    victim = victims[jnp.where(ok, rank, N - 1)]
+    usable = ok & ((-neg)[jnp.clip(rank, 0, N - 1)] < INF)
+    page = jnp.where(usable, page, -1)
+    victim = victims[jnp.where(usable, rank, N - 1)]
     return KVFetchPlan(seq=seq, page=page, victim=victim)
 
 

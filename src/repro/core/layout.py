@@ -39,6 +39,11 @@ REMOTE = 2   # backed by its slab slot (far tier)
 PSF_RUNTIME = False  # object-fetch ingress
 PSF_PAGING = True    # paging ingress
 
+# Bounds the epoch governor may move the adaptive CAR threshold within
+# (paper Fig. 10: thresholds below ~0.1 page prematurely, 1.0 never pages).
+CAR_THR_MIN = 0.1
+CAR_THR_MAX = 1.0
+
 
 @dataclasses.dataclass(frozen=True)
 class PlaneConfig:
@@ -50,10 +55,16 @@ class PlaneConfig:
     page_objs: int             # objects per page P
     num_frames: int            # local frames F (the "local memory" budget)
     num_vpages: int            # virtual pages V (>= ceil(O/P) + log headroom)
-    car_threshold: float = 0.8       # CAR >= threshold  => PSF=paging at page-out
+    car_threshold: float = 0.8       # initial CAR >= threshold => PSF=paging
     evac_garbage_threshold: float = 0.5  # dead/allocated ratio triggering evacuation
-    readahead: int = 0         # paging-path readahead window (pages)
+    readahead: int = 0         # sequential prefetch window (pages per miss)
     dtype: Any = jnp.float32
+    # Prefetch planner (the paging plan's candidate section, repro.core.batch):
+    prefetch: str = "sequential"     # "sequential" window | "majority" stride vote
+    prefetch_budget: int = 8         # static cap on prefetch pages per batch
+    # Epoch governor (repro.core.plane.advance_epoch):
+    car_decay: float = 0.5           # CAR EMA decay per epoch
+    governor_gain: float = 0.05      # car_threshold step per epoch (adaptive)
     # Object-plane (AIFM-analogue) baseline knobs:
     object_evict_batch: int = 8      # objects evicted per reclaim
     lru_scan_budget: int = 0         # 0 = unlimited scan; >0 models CPU-starved LRU
@@ -64,6 +75,8 @@ class PlaneConfig:
     # "auto" = Pallas on TPU / jnp ref elsewhere; "pallas" | "interpret" | "ref"
 
     def __post_init__(self):
+        assert self.prefetch in ("sequential", "majority"), self.prefetch
+        assert self.prefetch_budget >= 0
         assert self.num_vpages * self.page_objs >= self.num_objs, (
             "virtual page space must cover the object space")
         assert self.num_vpages >= self.data_pages + 4, (

@@ -23,6 +23,7 @@ from typing import Callable
 
 import jax.numpy as jnp
 
+from ..kernels import ops as kops
 from . import state as st
 from .layout import REMOTE, PlaneConfig
 
@@ -33,15 +34,25 @@ def remote_apply(cfg: PlaneConfig, s: st.PlaneState, vpages: jnp.ndarray,
 
     ``fn`` maps ``[P, D] -> [...]`` and is vmapped over the requested pages.
     Pages that are actually local are served from frames (free consistency:
-    there is never more than one live copy of a page).  Returns
-    ``(state, results)``; the touched pages are pinned for the duration via
-    the offload bit analogue (caller releases with :func:`remote_release`)."""
+    there is never more than one live copy of a page).  Each page is
+    gathered from exactly ONE tier via masked page-granular gathers (a
+    page's index into the other tier is ``-1``) — the traffic-saving
+    primitive must not move both the frame and the slab copy of every
+    requested page.  Returns ``(state, results)``; the touched pages are
+    pinned for the duration via the offload bit analogue (caller releases
+    with :func:`remote_release`)."""
     import jax
 
+    P, D, V, F = cfg.page_objs, cfg.obj_dim, cfg.num_vpages, cfg.num_frames
     local = s.backing[vpages] != REMOTE
-    frames_idx = jnp.maximum(s.frame_of[vpages], 0)
-    pages = jnp.where(local[:, None, None],
-                      s.frames[frames_idx], s.slab[vpages])
+    fidx = jnp.where(local, jnp.maximum(s.frame_of[vpages], 0), -1)
+    sidx = jnp.where(local, -1, vpages)
+    from_frames = kops.gather_rows(s.frames.reshape(F, P * D), fidx,
+                                   impl=cfg.kernel_impl)
+    from_slab = kops.gather_rows(s.slab.reshape(V, P * D), sidx,
+                                 impl=cfg.kernel_impl)
+    pages = jnp.where(local[:, None], from_frames,
+                      from_slab).reshape(-1, P, D)
     results = jax.vmap(fn)(pages)
     s = s._replace(pin=s.pin.at[vpages].add(1))   # offload-busy
     return s, results

@@ -59,10 +59,16 @@ def unpin_page(s: st.PlaneState, v) -> st.PlaneState:
 
 def page_out(cfg: PlaneConfig, s: st.PlaneState, f) -> st.PlaneState:
     """Evict frame ``f``: write back to the slab, update PSF from CAR,
-    clear the CAT.  Must only be called on an unpinned, occupied frame."""
+    clear the CAT.  Must only be called on an unpinned, occupied frame.
+
+    The PSF decision blends the epoch governor's decayed CAR EMA with the
+    instantaneous window CAR (an epoch boundary clears the CAT, so right
+    after one the window alone under-measures) and compares against the
+    ADAPTIVE threshold ``s.car_thr`` (== ``cfg.car_threshold`` until the
+    governor moves it)."""
     v = s.vpage_of[f]
-    car = car_of(cfg, s, v)
-    new_psf = car >= cfg.car_threshold
+    car = jnp.maximum(car_of(cfg, s, v), s.car_ema[v])
+    new_psf = car >= s.car_thr
     old_psf = s.psf[v]
     flip_to_p = jnp.logical_and(~old_psf, new_psf).astype(jnp.int32)
     flip_to_r = jnp.logical_and(old_psf, ~new_psf).astype(jnp.int32)
@@ -80,6 +86,7 @@ def page_out(cfg: PlaneConfig, s: st.PlaneState, f) -> st.PlaneState:
         frame_of=s.frame_of.at[v].set(-1),
         vpage_of=s.vpage_of.at[f].set(-1),
         dirty=s.dirty.at[v].set(False),
+        prefetched=s.prefetched.at[v].set(False),  # unread prefetch wasted
         stats=st.bump(s.stats, page_outs=1,
                       dirty_page_outs=dirty.astype(jnp.int32),
                       psf_to_paging=flip_to_p, psf_to_runtime=flip_to_r),
@@ -140,22 +147,21 @@ def page_in(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
     return s
 
 
-def page_in_with_readahead(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
-    """Paging path with a sequential readahead window (kernel prefetcher
-    analogue; window size = ``cfg.readahead``)."""
-    s = page_in(cfg, s, v)
-    if cfg.readahead <= 0:
-        return s
-
-    def body(i, s):
-        nv = v + 1 + i
-        ok = (nv < cfg.num_vpages)
-        ok = jnp.logical_and(ok, s.backing[jnp.minimum(nv, cfg.num_vpages - 1)] == REMOTE)
-        # only readahead pages that are also on the paging path
-        ok = jnp.logical_and(ok, s.psf[jnp.minimum(nv, cfg.num_vpages - 1)])
-        return lax.cond(ok, lambda s: page_in(cfg, s, nv), lambda s: s, s)
-
-    return lax.fori_loop(0, cfg.readahead, body, s)
+def page_in_at(cfg: PlaneConfig, s: st.PlaneState, v, f) -> st.PlaneState:
+    """Fetch vpage ``v`` into the GIVEN (already vacated) frame ``f`` —
+    the scalar replay body of a planned paging fetch (the batch planner
+    chose the victim; ``page_in`` above chooses its own via alloc_frame)."""
+    page = lax.dynamic_index_in_dim(s.slab, v, axis=0, keepdims=False)
+    frames = lax.dynamic_update_index_in_dim(s.frames, page, f, axis=0)
+    return s._replace(
+        frames=frames,
+        backing=s.backing.at[v].set(LOCAL),
+        frame_of=s.frame_of.at[v].set(f),
+        vpage_of=s.vpage_of.at[f].set(v),
+        cat=s.cat.at[v].set(False),
+        clock=s.clock.at[v].set(s.step),
+        stats=st.bump(s.stats, page_ins=1),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -179,6 +185,8 @@ def _fresh_vpage(cfg: PlaneConfig, s: st.PlaneState):
         dirty=s.dirty.at[v].set(True),   # log pages are born dirty
         clock=s.clock.at[v].set(s.step),
         psf=s.psf.at[v].set(cfg.psf_init_paging),
+        car_ema=s.car_ema.at[v].set(0.0),
+        prefetched=s.prefetched.at[v].set(False),
     )
     return pin_page(s, v), v
 
@@ -209,7 +217,8 @@ def free_page(cfg: PlaneConfig, s: st.PlaneState, v) -> st.PlaneState:
 
     s = lax.cond(s.frame_of[v] >= 0, drop_frame, lambda s: s, s)
     return s._replace(backing=s.backing.at[v].set(FREE),
-                      dirty=s.dirty.at[v].set(False))
+                      dirty=s.dirty.at[v].set(False),
+                      prefetched=s.prefetched.at[v].set(False))
 
 
 def _kill_old_copy(cfg: PlaneConfig, s: st.PlaneState, v_old, slot_old

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import functools
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +31,8 @@ from ..kernels import ops as kops
 from . import batch as batch_lib
 from . import paths
 from . import state as st
-from .layout import FREE, LOCAL, REMOTE, PlaneConfig
+from .layout import (CAR_THR_MAX, CAR_THR_MIN, FREE, LOCAL, REMOTE,
+                     PlaneConfig)
 
 
 # --------------------------------------------------------------------------
@@ -106,44 +108,125 @@ def jitted_execute_access(cfg: PlaneConfig, mode: str | None = None):
 
 @functools.lru_cache(maxsize=None)
 def _jitted_evacuate(cfg: PlaneConfig, garbage_threshold: float | None,
-                     max_pages: int):
+                     max_pages: int, clear_access: bool):
     return jax.jit(partial(evacuate, cfg, garbage_threshold=garbage_threshold,
-                           max_pages=max_pages))
+                           max_pages=max_pages, clear_access=clear_access))
 
 
 def jitted_evacuate(cfg: PlaneConfig, garbage_threshold: float | None = None,
-                    max_pages: int = 16):
-    return _jitted_evacuate(cfg, garbage_threshold, max_pages)
+                    max_pages: int = 16, clear_access: bool = True):
+    return _jitted_evacuate(cfg, garbage_threshold, max_pages, clear_access)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_plan_evacuate(cfg: PlaneConfig, garbage_threshold: float | None,
+                          max_pages: int):
+    return jax.jit(partial(plan_evacuate, cfg,
+                           garbage_threshold=garbage_threshold,
+                           max_pages=max_pages))
+
+
+def jitted_plan_evacuate(cfg: PlaneConfig,
+                         garbage_threshold: float | None = None,
+                         max_pages: int = 16):
+    return _jitted_plan_evacuate(cfg, garbage_threshold, max_pages)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_execute_evacuate(cfg: PlaneConfig,
+                             garbage_threshold: float | None,
+                             clear_access: bool):
+    return jax.jit(partial(execute_evacuate, cfg,
+                           garbage_threshold=garbage_threshold,
+                           clear_access=clear_access))
+
+
+def jitted_execute_evacuate(cfg: PlaneConfig,
+                            garbage_threshold: float | None = None,
+                            clear_access: bool = True):
+    return _jitted_execute_evacuate(cfg, garbage_threshold, clear_access)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_advance_epoch(cfg: PlaneConfig):
+    return jax.jit(partial(advance_epoch, cfg))
+
+
+def jitted_advance_epoch(cfg: PlaneConfig):
+    return _jitted_advance_epoch(cfg)
+
+
+# --------------------------------------------------------------------------
+# epoch governor (always-on profiling, adaptive path selection)
+# --------------------------------------------------------------------------
+
+def advance_epoch(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
+    """Close one profiling epoch: fold the card-table window into the
+    per-page CAR EMA (``kernels.cat_decay``), let the governor adapt the
+    PSF threshold from the epoch's observed paging-vs-runtime traffic, and
+    recompute every allocated page's PSF from the decayed CAR — path
+    selection adapts *online*, without waiting for a page-out.
+
+    Governor law: with ``d_page``/``d_obj`` the bytes each ingress path
+    moved since the last epoch, the threshold moves by ``governor_gain *
+    (d_page - d_obj) / total`` (clipped to [CAR_THR_MIN, CAR_THR_MAX]).
+    When paging traffic dominates, the bar for the paging path rises —
+    sparse pages that were amplifying I/O drop to the runtime path; when
+    object traffic dominates, the bar falls and co-accessed pages return
+    to bulk paging.  At equilibrium the two paths carry comparable bytes,
+    which is where the hybrid's amplification-vs-overhead tradeoff sits
+    (paper Fig. 10's flat optimum around 0.8-0.9).
+
+    The card table is cleared to open the next window (``page_out``
+    therefore blends the instantaneous window CAR with the EMA).  Pure
+    vectorized state math — identical under both access modes."""
+    allocated = s.backing != FREE
+    ema = kops.cat_decay(s.cat, s.car_ema, s.alloc_count,
+                         decay=cfg.car_decay, impl=cfg.kernel_impl)
+    ema = jnp.where(allocated, ema, 0.0)
+
+    d_page = ((s.stats.page_ins - s.epoch_page_ins).astype(jnp.float32)
+              * cfg.page_bytes)
+    d_obj = ((s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
+             * cfg.row_bytes)
+    total = d_page + d_obj
+    imbalance = jnp.where(total > 0.0,
+                          (d_page - d_obj) / jnp.maximum(total, 1.0), 0.0)
+    thr = jnp.clip(s.car_thr + jnp.float32(cfg.governor_gain) * imbalance,
+                   CAR_THR_MIN, CAR_THR_MAX)
+
+    new_psf = jnp.where(allocated, ema >= thr, s.psf)
+    flip_p = jnp.sum((allocated & ~s.psf & new_psf).astype(jnp.int32))
+    flip_r = jnp.sum((allocated & s.psf & ~new_psf).astype(jnp.int32))
+    return s._replace(
+        cat=jnp.zeros_like(s.cat),        # open the next epoch window
+        car_ema=ema, car_thr=thr, psf=new_psf,
+        epoch=s.epoch + 1,
+        epoch_page_ins=s.stats.page_ins, epoch_obj_ins=s.stats.obj_ins,
+        stats=st.bump(s.stats, epochs=1, psf_to_paging=flip_p,
+                      psf_to_runtime=flip_r))
 
 
 # --------------------------------------------------------------------------
 # evacuation (concurrent compactor analogue, paper §4.3)
 # --------------------------------------------------------------------------
 
-def evacuate(cfg: PlaneConfig, s: st.PlaneState,
-             garbage_threshold: float | None = None,
-             max_pages: int = 16) -> st.PlaneState:
-    """Compact local pages whose dead-slot ratio exceeds the threshold.
+class EvacPlan(NamedTuple):
+    """Victim selection for one evacuation slice (fixed ``[k]`` shapes, so
+    the serving engine can dispatch planning and execution as separate
+    async device calls into pipeline bubbles)."""
 
-    Live objects are segregated by their access bit: recently-accessed
-    ("hot") objects are appended to a dedicated hot destination page,
-    the rest to a cold one — manufacturing the spatial locality that lets
-    subsequent accesses take the cheap paging path.  Each victim's moves
-    are planned as two append streams and executed with the
-    ``kernels.compact`` page-assembly kernel (one gather-DMA per
-    destination page) instead of a per-slot append chain.  All access bits
-    are cleared at the end (paper: "cleared by the evacuator at the end of
-    each evacuation").
+    victims: jnp.ndarray   # [k] int32 candidate vpages (garbage-ratio top-k)
+    ok: jnp.ndarray        # [k] bool  candidate was eligible at plan time
 
-    Evacuation is *incremental*: at most ``max_pages`` victims (the highest
-    garbage ratios) are compacted per call, bounding the pause the
-    concurrent evacuator imposes on the application — exactly the
-    tail-latency discipline the paper demands of memory management."""
-    thr = cfg.evac_garbage_threshold if garbage_threshold is None else garbage_threshold
-    P, V, F, O = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.num_objs
-    D = cfg.obj_dim
 
-    # victim selection: top-K local unpinned pages by garbage ratio
+def plan_evacuate(cfg: PlaneConfig, s: st.PlaneState,
+                  garbage_threshold: float | None = None,
+                  max_pages: int = 16) -> EvacPlan:
+    """Select at most ``max_pages`` evacuation victims: the local, unpinned
+    pages with the highest dead-slot ratio above the threshold."""
+    thr = (cfg.evac_garbage_threshold if garbage_threshold is None
+           else garbage_threshold)
     allocated_all = s.alloc_count
     dead_all = allocated_all - s.live_count
     ratio_all = dead_all.astype(jnp.float32) / jnp.maximum(allocated_all, 1)
@@ -152,7 +235,28 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
     score = jnp.where(eligible, ratio_all, -1.0)
     k = min(max_pages, cfg.num_vpages)
     _, victims = lax.top_k(score, k)
-    victim_ok = score[victims] > -1.0
+    return EvacPlan(victims=victims, ok=score[victims] > -1.0)
+
+
+def execute_evacuate(cfg: PlaneConfig, s: st.PlaneState, plan: EvacPlan,
+                     garbage_threshold: float | None = None, *,
+                     clear_access: bool = True) -> st.PlaneState:
+    """Compact the planned victim pages (hot/cold segregation by access
+    bit, ``kernels.compact`` page assembly).  Each victim's eligibility is
+    re-checked against the *current* state — a stale plan entry (page
+    evicted, drained, or pinned since planning) is skipped, so a plan may
+    safely execute several dispatch gaps after it was made.
+
+    ``clear_access=False`` keeps the access bits (paper: the evacuator
+    clears them "at the end of each evacuation" — for background slices
+    that is the end of a full round, not of every slice; the serving
+    engine clears on its round boundary)."""
+    thr = (cfg.evac_garbage_threshold if garbage_threshold is None
+           else garbage_threshold)
+    P, V, F, O = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.num_objs
+    D = cfg.obj_dim
+    victims, victim_ok = plan.victims, plan.ok
+    k = victims.shape[0]
 
     def page_body(i, s):
         v = victims[i]
@@ -241,7 +345,37 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
         return lax.cond(selected, evacuate_page, lambda s: s, s)
 
     s = lax.fori_loop(0, k, page_body, s)
-    return s._replace(access=jnp.zeros_like(s.access))
+    if clear_access:
+        s = s._replace(access=jnp.zeros_like(s.access))
+    return s
+
+
+def evacuate(cfg: PlaneConfig, s: st.PlaneState,
+             garbage_threshold: float | None = None,
+             max_pages: int = 16, *,
+             clear_access: bool = True) -> st.PlaneState:
+    """Foreground evacuation: plan + execute in one call.
+
+    Live objects are segregated by their access bit: recently-accessed
+    ("hot") objects are appended to a dedicated hot destination page,
+    the rest to a cold one — manufacturing the spatial locality that lets
+    subsequent accesses take the cheap paging path.  Each victim's moves
+    are planned as two append streams and executed with the
+    ``kernels.compact`` page-assembly kernel (one gather-DMA per
+    destination page) instead of a per-slot append chain.  All access bits
+    are cleared at the end (paper: "cleared by the evacuator at the end of
+    each evacuation").
+
+    Evacuation is *incremental*: at most ``max_pages`` victims (the highest
+    garbage ratios) are compacted per call, bounding the pause the
+    concurrent evacuator imposes on the application.  The serving engine
+    goes further and schedules ``plan_evacuate``/``execute_evacuate`` as
+    small background slices inside pipeline bubbles (``evac_budget``) —
+    this wrapper is the blocking-foreground composition of the same two
+    halves."""
+    plan = plan_evacuate(cfg, s, garbage_threshold, max_pages)
+    return execute_evacuate(cfg, s, plan, garbage_threshold,
+                            clear_access=clear_access)
 
 
 # --------------------------------------------------------------------------

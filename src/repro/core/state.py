@@ -21,12 +21,15 @@ class PlaneStats(NamedTuple):
     obj_ins: jnp.ndarray         # runtime-path ingress events (objects)
     page_outs: jnp.ndarray       # egress events (pages)
     dirty_page_outs: jnp.ndarray # egress events that wrote data back
-    psf_to_paging: jnp.ndarray   # PSF flips runtime->paging at page-out
-    psf_to_runtime: jnp.ndarray  # PSF flips paging->runtime at page-out
+    psf_to_paging: jnp.ndarray   # PSF flips runtime->paging (page-out / epoch)
+    psf_to_runtime: jnp.ndarray  # PSF flips paging->runtime (page-out / epoch)
     evac_moved: jnp.ndarray      # objects moved by the evacuator
     evac_pages: jnp.ndarray      # pages reclaimed by the evacuator
     obj_outs: jnp.ndarray        # object-granular egress (object-plane baseline)
     lru_scans: jnp.ndarray       # objects scanned by object-level LRU (baseline)
+    prefetch_issued: jnp.ndarray # prefetch page-ins (subset of page_ins)
+    prefetch_used: jnp.ndarray   # prefetched pages later hit by a demand access
+    epochs: jnp.ndarray          # advance_epoch invocations (governor runs)
 
     @classmethod
     def zeros(cls) -> "PlaneStats":
@@ -54,9 +57,16 @@ class PlaneState(NamedTuple):
     live_count: jnp.ndarray  # [V] int32  live slots
     alloc_count: jnp.ndarray # [V] int32  slots ever allocated (log cursor)
     # --- always-on profiling (paper §4.1/4.3) ----------------------------
-    cat: jnp.ndarray         # [V, P] bool  card access table (since page-in/alloc)
+    cat: jnp.ndarray         # [V, P] bool  card access table (epoch window)
     psf: jnp.ndarray         # [V] bool     path selector flag (True = paging)
     access: jnp.ndarray      # [V, P] bool  access bit since last evacuation
+    # --- epoch governor (adaptive path selection, Atlas's control loop) ---
+    car_ema: jnp.ndarray     # [V] f32  decayed CAR (advance_epoch)
+    car_thr: jnp.ndarray     # [] f32   adaptive PSF threshold (governor)
+    epoch: jnp.ndarray       # [] int32 epoch counter
+    epoch_page_ins: jnp.ndarray  # [] int32 stats.page_ins at last epoch
+    epoch_obj_ins: jnp.ndarray   # [] int32 stats.obj_ins at last epoch
+    prefetched: jnp.ndarray  # [V] bool  prefetched, not yet demand-touched
     # --- residency metadata ----------------------------------------------
     pin: jnp.ndarray         # [V] int32  deref counts (Invariants #2/#3)
     dirty: jnp.ndarray       # [V] bool   modified since last writeback
@@ -114,6 +124,12 @@ def create(cfg: PlaneConfig, initial: jnp.ndarray) -> PlaneState:
         cat=jnp.zeros((V, P), bool),
         psf=jnp.full((V,), cfg.psf_init_paging, bool),
         access=jnp.zeros((V, P), bool),
+        car_ema=jnp.zeros((V,), jnp.float32),
+        car_thr=jnp.asarray(cfg.car_threshold, jnp.float32),
+        epoch=jnp.asarray(0, jnp.int32),
+        epoch_page_ins=jnp.asarray(0, jnp.int32),
+        epoch_obj_ins=jnp.asarray(0, jnp.int32),
+        prefetched=jnp.zeros((V,), bool),
         pin=jnp.zeros((V,), jnp.int32),
         dirty=jnp.zeros((V,), bool),
         clock=jnp.zeros((V,), jnp.int32),

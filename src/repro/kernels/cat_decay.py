@@ -1,0 +1,56 @@
+"""Epoch-advance kernel: decayed card-access-rate EMA (always-on profiling).
+
+Sibling of ``cat_update``: where that kernel folds a batch of touches INTO
+the card table, this one folds the card table into the per-page CAR EMA at
+an epoch boundary.  Each grid step reduces one page's card bits to the
+epoch-window CAR (popcount / allocated cards) and blends it into the
+running EMA:
+
+    ema' = decay * ema + (1 - decay) * popcount(cat) / max(alloc, 1)
+
+The epoch governor (``plane.advance_epoch``) recomputes every allocated
+page's PSF from this decayed CAR — path selection adapts online instead of
+waiting for a page-out — and the caller clears the card table to open the
+next epoch window.
+
+Shapes: cat [V, P] int32 (0/1 card bits), car_ema [V, 1] float32,
+        alloc [V, 1] int32 -> new_ema [V, 1] float32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cat_ref, ema_ref, alloc_ref, out_ref, *, decay: float):
+    cnt = jnp.sum(cat_ref[...].astype(jnp.float32), axis=1, keepdims=True)
+    denom = jnp.maximum(alloc_ref[...], 1).astype(jnp.float32)
+    car = cnt / denom
+    out_ref[...] = jnp.float32(decay) * ema_ref[...] + \
+        jnp.float32(1.0 - decay) * car
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "interpret"))
+def cat_decay(cat: jnp.ndarray, car_ema: jnp.ndarray, alloc: jnp.ndarray, *,
+              decay: float, interpret: bool = False) -> jnp.ndarray:
+    """cat [V, P] int32, car_ema [V, 1] f32, alloc [V, 1] i32 -> [V, 1] f32."""
+    V, P = cat.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(V,),
+        in_specs=[pl.BlockSpec((1, P), lambda v: (v, 0)),
+                  pl.BlockSpec((1, 1), lambda v: (v, 0)),
+                  pl.BlockSpec((1, 1), lambda v: (v, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda v: (v, 0)),
+    )
+    kernel = functools.partial(_kernel, decay=decay)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((V, 1), jnp.float32),
+        interpret=interpret,
+    )(cat, car_ema, alloc)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cat_decay import cat_decay as _cat_decay_pallas
 from .cat_update import cat_update as _cat_pallas
 from .compact import compact_pages as _compact_pallas
 from .gather_objects import gather_rows as _gather_pallas
@@ -78,6 +79,18 @@ def cat_update(cat_bits, vaddrs, *, page_objs: int, impl="auto"):
     bits, counts = _cat_pallas(cat_bits, vaddrs, page_objs=page_objs,
                                interpret=(m == "interpret"))
     return bits, counts[:, 0].astype(jnp.float32) / jnp.float32(page_objs)
+
+
+def cat_decay(cat, car_ema, alloc, *, decay: float, impl="auto"):
+    """Epoch-advance CAR EMA.  cat [V, P] bool, car_ema [V] f32,
+    alloc [V] i32 -> new_ema [V] f32 (see kernels.cat_decay)."""
+    m = _mode(impl)
+    cat_i = cat.astype(jnp.int32)
+    if m == "ref":
+        return ref.cat_decay_ref(cat_i, car_ema, alloc, decay)
+    out = _cat_decay_pallas(cat_i, car_ema[:, None], alloc[:, None],
+                            decay=decay, interpret=(m == "interpret"))
+    return out[:, 0]
 
 
 def paged_attention(q, k_pages, v_pages, page_table, page_lens, *, impl="auto"):

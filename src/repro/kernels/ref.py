@@ -66,6 +66,14 @@ def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
     return (x * jnp.uint32(0x01010101)) >> 24
 
 
+def cat_decay_ref(cat: jnp.ndarray, car_ema: jnp.ndarray, alloc: jnp.ndarray,
+                  decay: float) -> jnp.ndarray:
+    """Epoch CAR EMA: cat [V, P] int32 (0/1), car_ema [V] f32, alloc [V] i32
+    -> new_ema [V] f32 = decay*ema + (1-decay)*popcount/max(alloc, 1)."""
+    car = cat.astype(jnp.float32).sum(axis=1) / jnp.maximum(alloc, 1)
+    return jnp.float32(decay) * car_ema + jnp.float32(1.0 - decay) * car
+
+
 # --------------------------------------------------------------------------
 # paged decode attention (the paging-path consumer)
 # --------------------------------------------------------------------------

@@ -55,6 +55,18 @@ class EngineConfig:
     mode: str = "batch"             # plan-then-execute engine | "reference" oracle
     dispatch: str = "pipelined"     # "pipelined" double-buffer | "sync"
     pipeline_depth: int = 2         # max in-flight batches before blocking
+    # Background evacuation: 0 = one foreground max_pages=16 compaction
+    # every evac_every ticks (the pre-slice behavior); >0 = roughly the
+    # foreground round's 16-page budget sliced into evac_budget-page
+    # plan+execute calls spread evenly across the round's dispatch gaps
+    # (ceil(16/budget) slices per round), so no single batch carries a
+    # multi-page compaction on its critical path.  Access bits clear once
+    # per round, on its first slice — the sliced round's "end of each
+    # evacuation".
+    evac_budget: int = 0
+    # Epoch governor: advance_epoch every this many ticks (hybrid plane;
+    # 0 = off).  Dispatched async like everything else.
+    epoch_every: int = 0
 
 
 class LatencyTracker:
@@ -93,18 +105,34 @@ class Engine:
         self.state = state_lib.create(pcfg, initial)
         # memoized jit entry points: engines sharing a PlaneConfig share one
         # compiled executable per op (continuous batching spins up several)
+        self._evac_slice = self._evac_slice_clear = None
         if cfg.plane == "hybrid":
             self._plan = plane_lib.jitted_plan_access(pcfg)
             self._exec = plane_lib.jitted_execute_access(pcfg, cfg.mode)
             self._evac = plane_lib.jitted_evacuate(pcfg)
+            if cfg.evac_budget > 0:
+                # background slices: each is plan_evacuate+execute_evacuate
+                # composed into ONE async device call (a two-call split
+                # only pays extra dispatch overhead when plan and execute
+                # land in the same gap anyway); same 16-page budget per
+                # evac_every round as the foreground call
+                self._evac_slice = plane_lib.jitted_evacuate(
+                    pcfg, max_pages=cfg.evac_budget, clear_access=False)
+                self._evac_slice_clear = plane_lib.jitted_evacuate(
+                    pcfg, max_pages=cfg.evac_budget, clear_access=True)
+                slices = -(-16 // cfg.evac_budget)      # ceil(16/budget)
+                self._evac_slice_period = max(1, cfg.evac_every // slices)
+                self._evac_round = 0    # last round whose access-clear ran
+            self._epoch = (plane_lib.jitted_advance_epoch(pcfg)
+                           if cfg.epoch_every > 0 else None)
         elif cfg.plane == "paging":
             self._plan = baselines.jitted_plan_paging(pcfg)
             self._exec = baselines.jitted_execute_paging(pcfg, cfg.mode)
-            self._evac = None
+            self._evac = self._epoch = None
         elif cfg.plane == "object":
             self._plan = baselines.jitted_plan_object(pcfg)
             self._exec = baselines.jitted_execute_object(pcfg, cfg.mode)
-            self._evac = None
+            self._evac = self._epoch = None
         else:
             raise ValueError(cfg.plane)
         self.latency = LatencyTracker()
@@ -116,7 +144,16 @@ class Engine:
                                                                 warm))
         if self._evac is not None:
             self.state = self._evac(self.state)
-        self.state = self.state._replace(stats=state_lib.PlaneStats.zeros())
+        if self._evac_slice is not None:
+            # compile-cache the background-slice pair (results discarded)
+            jax.block_until_ready(self._evac_slice(self.state))
+            jax.block_until_ready(self._evac_slice_clear(self.state))
+        if self._epoch is not None:
+            jax.block_until_ready(self._epoch(self.state))
+        self.state = self.state._replace(
+            stats=state_lib.PlaneStats.zeros(),
+            epoch_page_ins=jnp.zeros_like(self.state.epoch_page_ins),
+            epoch_obj_ins=jnp.zeros_like(self.state.epoch_obj_ins))
 
     # -- pipelined dispatch -------------------------------------------------
 
@@ -140,8 +177,29 @@ class Engine:
         self.state, rows = self._exec(self.state, ids, plan)
         self._inflight.append((t_sched, rows, len(obj_ids)))
         self.ticks += 1
-        if self._evac is not None and self.ticks % self.cfg.evac_every == 0:
-            self.state = self._evac(self.state)
+        if self._evac is not None:
+            if self.cfg.evac_budget > 0:
+                # background evacuation: the foreground round's 16-page
+                # budget rides in as evac_budget-page slices spread evenly
+                # across the round's dispatch gaps (async device calls —
+                # the host moves on to batch N+1 immediately); the
+                # access-bit round closes on the evac_every boundary,
+                # where the foreground mode used to pay the whole
+                # compaction at once
+                if self.ticks % self._evac_slice_period == 0:
+                    # access bits clear once per evac_every round: on the
+                    # first slice of each new round (period need not
+                    # divide evac_every)
+                    round_id = self.ticks // self.cfg.evac_every
+                    if round_id > self._evac_round:
+                        self._evac_round = round_id
+                        self.state = self._evac_slice_clear(self.state)
+                    else:
+                        self.state = self._evac_slice(self.state)
+            elif self.ticks % self.cfg.evac_every == 0:
+                self.state = self._evac(self.state)
+        if self._epoch is not None and self.ticks % self.cfg.epoch_every == 0:
+            self.state = self._epoch(self.state)
         limit = 0 if self.cfg.dispatch == "sync" else self.cfg.pipeline_depth
         while len(self._inflight) > limit:
             self._retire_one()

@@ -54,9 +54,13 @@ def workload(kind: str, n_objs: int, batch: int, steps: int, seed: int = 0):
         yield jnp.asarray(ids, jnp.int32)
 
 
+@pytest.mark.parametrize("prefetch", ["sequential", "majority"])
 @pytest.mark.parametrize("kind", ["random", "skewed", "sequential"])
-def test_access_equivalence(kind):
-    cfg, data, s0 = mk(readahead=2)
+def test_access_equivalence(kind, prefetch):
+    """Batch vs reference on the IDENTICAL plan — including the prefetch
+    candidate section, for both the sequential-window and the
+    majority-stride planner."""
+    cfg, data, s0 = mk(readahead=2, prefetch=prefetch, prefetch_budget=4)
     accB = jitted_access(cfg, "batch")
     accR = jitted_access(cfg, "reference")
     sb = sr = s0
@@ -72,11 +76,13 @@ def test_access_equivalence(kind):
     assert all(check_invariants(cfg, sb).values())
 
 
-@pytest.mark.parametrize("plane", ["paging", "object"])
+@pytest.mark.parametrize("plane", ["paging", "paging-majority", "object"])
 def test_baseline_equivalence(plane):
-    cfg, data, s0 = mk(readahead=2)
-    mkjit = (jitted_paging_access if plane == "paging"
-             else jitted_object_access)
+    kw = (dict(prefetch="majority", prefetch_budget=4)
+          if plane == "paging-majority" else {})
+    cfg, data, s0 = mk(readahead=2, **kw)
+    mkjit = (jitted_object_access if plane == "object"
+             else jitted_paging_access)
     fB = mkjit(cfg, "batch")
     fR = mkjit(cfg, "reference")
     sb = sr = s0
@@ -216,6 +222,30 @@ def test_kvplane_attend_sparse_equivalence(qscale):
         assert_kv_states_equal(sb, sr, f"(qscale={qscale}, step {i})")
     # the sweep exercised real churn: some pages were fetched and evicted
     assert int(np.asarray(sb.frame_page >= 0).sum()) > 0
+
+
+@pytest.mark.parametrize("prefetch", ["sequential", "majority"])
+def test_kvplane_attend_sparse_equivalence_with_lookahead(prefetch):
+    """Decode lookahead (the prefetch section of the kv fetch plan) keeps
+    the batch executor bit-identical to the scalar replay."""
+    cfg = kvplane.KVPlaneConfig(kv_heads=2, head_dim=8, page_tokens=4,
+                                num_pages=12, num_frames=8, batch=2,
+                                sparse_topk=4, fetch_budget=2,
+                                car_threshold=0.5, dtype=jnp.float32,
+                                prefetch=prefetch, prefetch_budget=2)
+    sb = _kv_prefill(cfg, 2)
+    sr = _kv_prefill(cfg, 2)
+    lengths = jnp.full((2,), cfg.num_pages * cfg.page_tokens, jnp.int32)
+    stepB = jax.jit(partial(kvplane.attend_sparse, cfg, mode="batch"))
+    stepR = jax.jit(partial(kvplane.attend_sparse, cfg, mode="reference"))
+    rng = np.random.RandomState(4)
+    for i in range(10):
+        q = jnp.asarray(rng.randn(2, 4, 8), jnp.float32)
+        ob, sb = stepB(sb, q, lengths)
+        orr, sr = stepR(sr, q, lengths)
+        np.testing.assert_array_equal(np.asarray(ob), np.asarray(orr),
+                                      err_msg=f"rows diverged at step {i}")
+        assert_kv_states_equal(sb, sr, f"({prefetch}, step {i})")
 
 
 def test_kvplane_sharded_append_attend_equivalence():

@@ -1,0 +1,202 @@
+"""Epoch governor + prefetch planner + background evacuation tests.
+
+Covers the adaptive control plane: epoch CAR decay flipping PSF online
+(no page-out involved), the traffic-balancing threshold governor, prefetch
+coverage/accuracy counter consistency, and the plan/execute evacuation
+split (sliced background evacuation preserves data + invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PlaneConfig, advance_epoch, check_invariants, create,
+                        execute_evacuate, jitted_access, jitted_advance_epoch,
+                        jitted_evacuate, peek, plan_evacuate)
+from repro.core import state as state_lib
+from repro.core.layout import CAR_THR_MAX, CAR_THR_MIN
+
+
+def mk(num_objs=96, obj_dim=4, page_objs=8, num_frames=6, num_vpages=40, **kw):
+    kw.setdefault("kernel_impl", "ref")
+    cfg = PlaneConfig(num_objs=num_objs, obj_dim=obj_dim, page_objs=page_objs,
+                      num_frames=num_frames, num_vpages=num_vpages, **kw)
+    data = jnp.arange(num_objs * obj_dim, dtype=jnp.float32
+                      ).reshape(num_objs, obj_dim)
+    return cfg, data, create(cfg, data)
+
+
+# --------------------------------------------------------------------------
+# epoch profiling: online PSF recomputation from decayed CAR
+# --------------------------------------------------------------------------
+
+def test_epoch_flips_psf_online_without_pageout():
+    """Sustained dense access moves a page runtime->paging across epochs;
+    sustained sparse access moves it back — all with zero page-outs (the
+    frames cover the working set), i.e. the flips are the governor's."""
+    cfg, data, s = mk(num_frames=16, psf_init_paging=False)
+    acc = jitted_access(cfg)
+    ep = jitted_advance_epoch(cfg)
+
+    # runtime-path warmup: the 8 objects of page 0 move to one fill page
+    ids = jnp.arange(8, dtype=jnp.int32)
+    s, _ = acc(s, ids)
+    v = int(s.obj_loc[0]) // cfg.page_objs
+    assert not bool(s.psf[v])                       # born on the runtime path
+    outs0 = int(s.stats.page_outs)
+
+    # dense epochs: every card of the page touched -> window CAR = 1
+    for _ in range(5):
+        s, _ = acc(s, ids)
+        s = ep(s)
+    assert bool(s.psf[v]), float(s.car_ema[v])      # flipped to paging online
+    assert float(s.car_ema[v]) >= float(s.car_thr)
+
+    # sparse epochs: one card per window -> EMA decays back down
+    one = jnp.zeros((8,), jnp.int32) + ids[0]
+    for _ in range(6):
+        s, _ = acc(s, one)
+        s = ep(s)
+    assert not bool(s.psf[v]), float(s.car_ema[v])  # and back to runtime
+    assert int(s.stats.page_outs) == outs0          # no page-out involved
+    assert int(s.stats.epochs) == 11
+    assert int(s.stats.psf_to_paging) >= 1
+    assert int(s.stats.psf_to_runtime) >= 1
+
+
+def test_epoch_clears_cat_window():
+    cfg, data, s = mk(num_frames=16)
+    acc = jitted_access(cfg)
+    s, _ = acc(s, jnp.arange(8, dtype=jnp.int32))
+    assert bool(s.cat.any())
+    s = advance_epoch(cfg, s)
+    assert not bool(s.cat.any())
+    assert int(s.epoch) == 1
+
+
+def test_governor_threshold_tracks_traffic_imbalance():
+    """Paging-dominated epochs raise the threshold, object-dominated epochs
+    lower it, and the walk clamps to [CAR_THR_MIN, CAR_THR_MAX]."""
+    cfg, data, s0 = mk()
+
+    def with_traffic(s, page_ins, obj_ins):
+        return s._replace(stats=state_lib.bump(
+            s.stats, page_ins=jnp.asarray(page_ins, jnp.int32),
+            obj_ins=jnp.asarray(obj_ins, jnp.int32)))
+
+    s = advance_epoch(cfg, with_traffic(s0, 100, 0))
+    assert float(s.car_thr) > cfg.car_threshold     # paging dominates: raise
+    up = float(s.car_thr)
+    s = advance_epoch(cfg, with_traffic(s, 0, 100))
+    assert float(s.car_thr) < up                    # objects dominate: lower
+    # no traffic -> no movement
+    thr = float(s.car_thr)
+    s = advance_epoch(cfg, s)
+    assert float(s.car_thr) == pytest.approx(thr)
+    # clamping at both ends
+    for _ in range(40):
+        s = advance_epoch(cfg, with_traffic(s, 1000, 0))
+    assert float(s.car_thr) == pytest.approx(CAR_THR_MAX)
+    for _ in range(40):
+        s = advance_epoch(cfg, with_traffic(s, 0, 1000))
+    assert float(s.car_thr) == pytest.approx(CAR_THR_MIN)
+
+
+def test_adaptive_threshold_drives_pageout_psf():
+    """page_out consults the ADAPTIVE threshold: with the governor pinned
+    at CAR_THR_MAX a fully-touched page still drops to the runtime path at
+    page-out (CAR 1.0 >= 1.0 keeps paging; just below must not)."""
+    cfg, data, s = mk(car_threshold=0.8)
+    acc = jitted_access(cfg)
+    s, _ = acc(s, jnp.arange(7, dtype=jnp.int32))   # 7 of 8 cards on page 0
+    s = s._replace(car_thr=jnp.asarray(1.0, jnp.float32))
+    from repro.core import evict_all
+    s = jax.jit(lambda s: evict_all(cfg, s))(s)
+    assert not bool(s.psf[0])                       # 7/8 < 1.0 -> runtime
+
+
+# --------------------------------------------------------------------------
+# prefetch counters
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", ["sequential", "majority"])
+def test_prefetch_counters_consistent_with_plans(prefetch):
+    """prefetch_used never exceeds prefetch_issued, issued pages are a
+    subset of page_ins, and the standing `prefetched` bits account for
+    exactly the issued-but-not-yet-used-or-evicted remainder."""
+    cfg, data, s = mk(num_frames=12, readahead=2, prefetch=prefetch,
+                      prefetch_budget=4)
+    acc = jitted_access(cfg)
+    for start in range(0, 96, 16):                   # marching scan
+        s, _ = acc(s, jnp.arange(start, start + 16, dtype=jnp.int32) % 96)
+    issued = int(s.stats.prefetch_issued)
+    used = int(s.stats.prefetch_used)
+    assert issued > 0                                # the planner engaged
+    assert used > 0                                  # and the scan used it
+    assert used <= issued
+    assert issued <= int(s.stats.page_ins)
+    outstanding = int(np.asarray(s.prefetched).sum())
+    assert outstanding <= issued - used
+    assert all(check_invariants(cfg, s).values())
+
+
+def test_prefetch_never_evicts_target_or_pinned():
+    """A prefetch must not push out a page this batch needs: with the pool
+    full of target pages, the plan schedules no prefetches at all."""
+    from repro.core import batch as batch_lib
+    cfg, data, s = mk(num_frames=6, readahead=2, prefetch="sequential",
+                      prefetch_budget=4)
+    acc = jitted_access(cfg)
+    ids = jnp.arange(48, dtype=jnp.int32)            # 6 pages = whole pool
+    s, _ = acc(s, ids)
+    plan = batch_lib.plan_access(cfg, s, ids)
+    pf = np.asarray(plan.pg_fetch)[np.asarray(plan.pg_is_pf)]
+    assert np.all(pf == -1)                          # nothing usable: dropped
+
+
+# --------------------------------------------------------------------------
+# background evacuation: plan/execute split
+# --------------------------------------------------------------------------
+
+def test_sliced_evacuation_preserves_data_and_invariants():
+    """Incremental evac_budget-page slices (clear_access=False) must reach
+    the same safety bar as the foreground call: data intact, invariants
+    hold, garbage actually reclaimed."""
+    cfg, data, s = mk(num_frames=8)
+    acc = jitted_access(cfg)
+    truth = np.asarray(data)
+    rng = np.random.RandomState(3)
+    moved0 = 0
+    for step in range(24):
+        ids = jnp.asarray(rng.choice(96, 12), jnp.int32)
+        s, _ = acc(s, ids)
+        if step % 2 == 1:                            # a slice per gap
+            # threshold -1: every local page qualifies, so the tiny slices
+            # are guaranteed to exercise compaction continuously
+            plan = plan_evacuate(cfg, s, garbage_threshold=-1.0, max_pages=2)
+            s = execute_evacuate(cfg, s, plan, garbage_threshold=-1.0,
+                                 clear_access=False)
+            assert all(check_invariants(cfg, s).values()), step
+            np.testing.assert_array_equal(
+                np.asarray(peek(cfg, s, jnp.arange(96, dtype=jnp.int32))),
+                truth)
+    assert int(s.stats.evac_pages) > 0
+    assert bool(s.access.any())                      # slices kept the bits
+    # the round boundary clears them
+    s = execute_evacuate(cfg, s, plan_evacuate(cfg, s, -1.0, 2), -1.0,
+                         clear_access=True)
+    assert not bool(s.access.any())
+
+
+def test_foreground_evacuate_is_plan_execute_composition():
+    cfg, data, s = mk(num_frames=8)
+    acc = jitted_access(cfg)
+    rng = np.random.RandomState(5)
+    for _ in range(12):
+        s, _ = acc(s, jnp.asarray(rng.choice(96, 12), jnp.int32))
+    a = jitted_evacuate(cfg, garbage_threshold=0.05)(s)
+    b = execute_evacuate(cfg, s, plan_evacuate(cfg, s, 0.05), 0.05)
+    for field in a._fields:
+        for x, y in zip(jax.tree.leaves(getattr(a, field)),
+                        jax.tree.leaves(getattr(b, field))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=field)

@@ -36,6 +36,22 @@ def test_cat_update_sweep(v, p, r):
     np.testing.assert_allclose(np.asarray(counts[:, 0]) / p, np.asarray(car))
 
 
+@pytest.mark.parametrize("v,p,decay", [(4, 8, 0.5), (16, 32, 0.25),
+                                       (5, 4, 0.9)])
+def test_cat_decay_sweep(v, p, decay):
+    cat = jnp.asarray(RNG.rand(v, p) < 0.4)
+    ema = jnp.asarray(RNG.rand(v), jnp.float32)
+    alloc = jnp.asarray(RNG.randint(0, p + 1, size=v), jnp.int32)
+    out_i = ops.cat_decay(cat, ema, alloc, decay=decay, impl="interpret")
+    out_r = ops.cat_decay(cat, ema, alloc, decay=decay, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(out_r),
+                               rtol=1e-6)
+    # hand check one page
+    exp0 = decay * float(ema[0]) + (1 - decay) * (
+        float(cat[0].sum()) / max(int(alloc[0]), 1))
+    assert float(out_r[0]) == pytest.approx(exp0, rel=1e-6)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,kvh,g,dh,f,p,npg",
                          [(2, 2, 4, 128, 8, 8, 3), (1, 1, 8, 128, 16, 16, 4),

@@ -149,3 +149,25 @@ def test_offload_remote_apply():
     assert np.all(np.asarray(s.pin[vpages]) == 1)   # offload-busy pins
     s = offload.remote_release(cfg, s, vpages)
     assert all(check_invariants(cfg, s).values())
+
+
+def test_offload_pin_balance_mixed_tiers():
+    """Regression for the single-source remote_apply: a mixed local/remote
+    request (with duplicate vpages) returns correct per-page results, and
+    release restores the exact pin vector — every +1 taken by apply
+    (including duplicates) is matched by release."""
+    from repro.core import offload
+    cfg, data, s = mk()
+    acc = jitted_access(cfg)
+    s, _ = acc(s, jnp.arange(8, dtype=jnp.int32))     # page 0 now LOCAL
+    assert int(s.backing[0]) == LOCAL and int(s.backing[3]) == REMOTE
+    pins0 = np.asarray(s.pin).copy()
+    vpages = jnp.asarray([0, 3, 3, 7], jnp.int32)     # duplicates included
+    s2, sums = offload.remote_apply(cfg, s, vpages, lambda page: page.sum())
+    expect = [float(data[v * 8:(v + 1) * 8].sum()) for v in [0, 3, 3, 7]]
+    np.testing.assert_allclose(np.asarray(sums), expect, rtol=1e-6)
+    assert int(s2.pin[0]) == pins0[0] + 1
+    assert int(s2.pin[3]) == pins0[3] + 2             # one pin per occurrence
+    s3 = offload.remote_release(cfg, s2, vpages)
+    np.testing.assert_array_equal(np.asarray(s3.pin), pins0)
+    assert all(check_invariants(cfg, s3).values())
