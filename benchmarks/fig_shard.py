@@ -1,0 +1,88 @@
+"""Sharded far tier scaling sweep: shards = 1/2/4/8 x {hybrid, paging}.
+
+Serves the MCD-CL (zipf+churn) workload through the serving engine at each
+shard count on 8 simulated host devices and reports unpaced drain
+throughput (batches/s) plus p99 request latency.  ``shards=1`` is the
+plain single-device engine — the baseline every sharded cell is anchored
+to (it must sit within noise of the pre-sharding engine, since the
+sharded path only engages at ``shards>1``); ``shards>1`` runs the
+round-based all_to_all exchange of ``repro.core.shardplane`` under
+shard_map on a ``far`` mesh.
+
+Simulated devices require ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` BEFORE jax initializes, and the parent benchmark process has
+long since imported jax — so the sweep runs in a subprocess (the same
+discipline as tests/test_dryrun_smoke.py) and ships its rows back as JSON
+on the last stdout line.
+
+NOTE: on CPU the shard_map cells pay real collective overhead for
+simulated parallelism (all 8 "devices" share the same cores), so
+``batches/s`` here measures exchange + dispatch cost, not the bandwidth
+scaling a real multi-chip far tier buys.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_CHILD = r"""
+import json, os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+params = json.loads(sys.argv[1])
+import numpy as np
+from benchmarks.common import plane_config
+from repro.data import kvworkload
+from repro.launch import mesh as mesh_lib
+from repro.serving.engine import Engine, EngineConfig
+import jax.numpy as jnp
+
+steps, batch = params["steps"], params["batch"]
+pcfg = plane_config(0.25)
+data = jnp.zeros((pcfg.num_objs, pcfg.obj_dim), pcfg.dtype)
+rows = []
+for plane in ["hybrid", "paging"]:
+    for shards in [1, 2, 4, 8]:
+        ecfg = EngineConfig(plane=plane, batch=batch, evac_every=16,
+                            shards=shards)
+        mesh = mesh_lib.make_far_mesh(shards) if shards > 1 else None
+        eng = Engine(ecfg, pcfg, data, mesh=mesh)
+        wl = list(kvworkload.zipf_churn(pcfg.num_objs, batch, steps, seed=3))
+        t0 = time.time()
+        rep = eng.run(iter(wl))
+        dt = time.time() - t0
+        lat = rep["latency"]
+        spills = rep["stats"].get("ingress_spills", 0)
+        rows.append([f"fig_shard/{plane}/s{shards}", dt / steps * 1e6,
+                     f"tput_bps={steps / dt:.1f};"
+                     f"p99_us={lat['p99_us']:.0f};"
+                     f"p50_us={lat['p50_us']:.0f};"
+                     f"paging_frac={rep['paging_fraction']:.2f};"
+                     f"spills={spills}"])
+print(json.dumps(rows))
+"""
+
+
+def run(quick: bool = False):
+    steps = 30 if quick else 120
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD,
+         json.dumps({"steps": steps, "batch": 64})],
+        capture_output=True, text=True, env=env, cwd=root, timeout=3000)
+    if proc.returncode != 0:
+        raise RuntimeError(f"fig_shard child failed:\n{proc.stderr[-4000:]}")
+    rows = [tuple(r) for r in json.loads(proc.stdout.strip().split("\n")[-1])]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -7,6 +7,7 @@ Public surface:
 * :mod:`repro.core.batch`     — plan-then-execute batch ingress engine
 * :mod:`repro.core.plane`     — hybrid ``access``/``update``/``evacuate``
 * :mod:`repro.core.baselines` — Fastswap/AIFM-analogue planes
+* :mod:`repro.core.shardplane` — the plane sharded over a ``far`` mesh axis
 * :mod:`repro.core.sync`      — deref-count (pin) protocol, live-lock guard
 * :mod:`repro.core.offload`   — far-side computation (offload space analogue)
 * :mod:`repro.core.kvplane`   — production tiered KV cache (serve path)
@@ -26,7 +27,7 @@ from .baselines import (paging_access, object_access, object_reclaim,
                         jitted_paging_access, jitted_object_access,
                         jitted_plan_paging, jitted_execute_paging,
                         jitted_plan_object, jitted_execute_object)
-from . import batch, sync, offload
+from . import batch, shardplane, sync, offload
 
 __all__ = [
     "FREE", "LOCAL", "REMOTE", "PSF_PAGING", "PSF_RUNTIME", "PlaneConfig",
@@ -42,5 +43,5 @@ __all__ = [
     "jitted_paging_access", "jitted_object_access",
     "jitted_plan_paging", "jitted_execute_paging",
     "jitted_plan_object", "jitted_execute_object",
-    "batch", "sync", "offload",
+    "batch", "shardplane", "sync", "offload",
 ]

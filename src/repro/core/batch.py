@@ -35,7 +35,11 @@ classification happens once against batch-entry state; duplicate requests
 for an already-scheduled page/object count as hits; a page evicted
 mid-batch under extreme memory pressure is *not* re-faulted — the final
 gather falls back to its (written-back) slab copy, so results are always
-ground truth.
+ground truth.  A **negative object id is a padded no-op request**: it
+classifies as neither hit nor miss, moves and profiles nothing (all its
+scatter indices are out-of-bounds sentinels, which JAX drops), and its
+result row is zero — the fixed-shape padding mechanism used by the
+sharded exchange (repro.core.shardplane) and partially-filled batches.
 
 ``mode="reference"`` runs the same plan through a scalar executor (one
 state update per moved row / touched card, using the ``paths`` helpers) —
@@ -212,19 +216,25 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     the runtime plan (AIFM baseline; no paging section at all)."""
     R = obj_ids.shape[0]
     Q = cfg.prefetch_budget
-    vaddr = s.obj_loc[obj_ids]
+    # A negative id is a padded no-op request (the sharded exchange and any
+    # partially-filled batch use this): it misses nothing, touches nothing,
+    # and its result row is zero.  Sentinel indices (V for vpages) make its
+    # scatters drop and keep every shape static.
+    valid = obj_ids >= 0
+    vaddr = s.obj_loc[jnp.maximum(obj_ids, 0)]
     v = vaddr // cfg.page_objs
     local = s.backing[v] == LOCAL
     if all_runtime:
         pg_mask = jnp.zeros_like(local)
-        rt_mask = ~local
+        rt_mask = valid & ~local
     elif split_by_psf:
         psf = s.psf[v]
-        pg_mask = ~local & psf
-        rt_mask = ~local & ~psf
+        pg_mask = valid & ~local & psf
+        rt_mask = valid & ~local & ~psf
     else:
-        pg_mask = ~local
+        pg_mask = valid & ~local
         rt_mask = jnp.zeros_like(local)
+    v = jnp.where(valid, v, cfg.num_vpages)
     page_plan, n_pages = _compact(v, _first_of(v, pg_mask))
     obj_plan, n_objs = _compact(obj_ids, _first_of(obj_ids, rt_mask))
     # Capacity governor for the runtime plan: fresh log pages allocate with
@@ -479,18 +489,23 @@ def _profile(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
              with_cat: bool, with_obj_last: bool, scalar: bool
              ) -> st.PlaneState:
     """Record every access at its *final* location in one vectorized pass
-    (cat_update-style: duplicate touches OR together, no scatter hazards)."""
-    va = s.obj_loc[obj_ids]
+    (cat_update-style: duplicate touches OR together, no scatter hazards).
+    Padded (negative-id) requests profile nothing: their scatter indices
+    are out of bounds, so both executors drop them identically."""
+    valid = obj_ids >= 0
+    va = s.obj_loc[jnp.maximum(obj_ids, 0)]
     v, slot = va // cfg.page_objs, va % cfg.page_objs
+    v = jnp.where(valid, v, cfg.num_vpages)
+    oid = jnp.where(valid, obj_ids, cfg.num_objs)
     if scalar:
         def body(i, s):
             if with_cat:
                 s = paths.touch(cfg, s, v[i], slot[i],
-                                obj_id=obj_ids[i] if with_obj_last else None)
+                                obj_id=oid[i] if with_obj_last else None)
             else:
                 s = s._replace(clock=s.clock.at[v[i]].set(s.step))
                 if with_obj_last:
-                    s = s._replace(obj_last=s.obj_last.at[obj_ids[i]].set(s.step))
+                    s = s._replace(obj_last=s.obj_last.at[oid[i]].set(s.step))
             return s
 
         return lax.fori_loop(0, obj_ids.shape[0], body, s)
@@ -499,7 +514,7 @@ def _profile(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
                        access=s.access.at[v, slot].set(True))
     s = s._replace(clock=s.clock.at[v].set(s.step))
     if with_obj_last:
-        s = s._replace(obj_last=s.obj_last.at[obj_ids].set(s.step))
+        s = s._replace(obj_last=s.obj_last.at[oid].set(s.step))
     return s
 
 
@@ -508,9 +523,11 @@ def _gather_final(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     """Read every requested row at its final location with one batched
     gather per tier.  Under extreme pressure a target can be paged out
     again mid-batch; its row is then served from the written-back slab
-    copy, so the result is ground truth either way."""
+    copy, so the result is ground truth either way.  Padded (negative-id)
+    requests read as zero rows in both executors."""
     P, V, F, D = cfg.page_objs, cfg.num_vpages, cfg.num_frames, cfg.obj_dim
-    va = s.obj_loc[obj_ids]
+    valid = obj_ids >= 0
+    va = s.obj_loc[jnp.maximum(obj_ids, 0)]
     v, slot = va // P, va % P
     local = s.backing[v] == LOCAL
     if scalar:
@@ -523,14 +540,16 @@ def _gather_final(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                             s.slab[v[i], slot[i]])
             return lax.dynamic_update_index_in_dim(out, row, i, axis=0)
 
-        return lax.fori_loop(0, R, body, out)
+        out = lax.fori_loop(0, R, body, out)
+        return jnp.where(valid[:, None], out, jnp.zeros_like(out))
     fidx = jnp.where(local, jnp.maximum(s.frame_of[v], 0) * P + slot, -1)
     sidx = jnp.where(local, -1, v * P + slot)
     rows_l = kops.gather_rows(s.frames.reshape(F * P, D), fidx,
                               impl=cfg.kernel_impl)
     rows_r = kops.gather_rows(s.slab.reshape(V * P, D), sidx,
                               impl=cfg.kernel_impl)
-    return jnp.where(local[:, None], rows_l, rows_r)
+    rows = jnp.where(local[:, None], rows_l, rows_r)
+    return jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
 
 
 # --------------------------------------------------------------------------
@@ -554,10 +573,10 @@ def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     host can enqueue batch N+1's plan while batch N's execute is still
     running (plan shapes depend only on the batch size — DESIGN.md §3b)."""
     scalar = _resolve(cfg, mode)
-    R = obj_ids.shape[0]
+    nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))   # padded ids don't count
     s = s._replace(step=s.step + 1)
     misses = plan.n_pages + plan.n_objs
-    s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - misses, misses=misses))
     # pre-scope barrier analogue: refresh the recency of every target page
     # so mid-batch eviction prefers non-target pages (soft pin; the hard
     # deref-count pins stay host-side, see sync.py)
@@ -589,8 +608,10 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     rows = rows.astype(cfg.dtype)
     s = s._replace(step=s.step + 1)
     plan = plan_access(cfg, s, obj_ids)
+    valid = obj_ids >= 0
+    nv = jnp.sum(valid.astype(jnp.int32))
     misses = plan.n_pages + plan.n_objs
-    s = s._replace(stats=st.bump(s.stats, hits=R - misses, misses=misses))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - misses, misses=misses))
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
     s = _account_prefetch_hits(cfg, s, plan)
     s = _exec_paging(cfg, s, plan, scalar=scalar)
@@ -598,9 +619,11 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
                  scalar=scalar)
 
-    va = s.obj_loc[obj_ids]
+    va = s.obj_loc[jnp.maximum(obj_ids, 0)]
     v, slot = va // P, va % P
     local = s.backing[v] == LOCAL
+    # padded (negative-id) requests write nothing: sentinel indices drop
+    vw = jnp.where(valid, v, V)
     if scalar:
         def body(i, s):
             def to_frames(s):
@@ -610,16 +633,16 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                     dirty=s.dirty.at[v[i]].set(True))
 
             def to_slab(s):
-                return s._replace(slab=s.slab.at[v[i], slot[i]].set(rows[i]))
+                return s._replace(slab=s.slab.at[vw[i], slot[i]].set(rows[i]))
 
-            return lax.cond(local[i], to_frames, to_slab, s)
+            return lax.cond(valid[i] & local[i], to_frames, to_slab, s)
 
         return lax.fori_loop(0, R, body, s)
 
     # last-wins dedup for duplicate ids, then one scatter per tier
     i = jnp.arange(R, dtype=jnp.int32)
     same = (obj_ids[None, :] == obj_ids[:, None])
-    last = jnp.max(jnp.where(same, i[None, :], -1), axis=1) == i
+    last = (jnp.max(jnp.where(same, i[None, :], -1), axis=1) == i) & valid
     fidx = jnp.where(last & local, jnp.maximum(s.frame_of[v], 0) * P + slot,
                      F * P)
     sidx = jnp.where(last & ~local, v * P + slot, V * P)
@@ -628,7 +651,7 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
         frames=s.frames.reshape(F * P, D).at[fidx].set(rows).reshape(F, P, D),
         slab=s.slab.reshape(V * P, D).at[sidx].set(rows).reshape(
             cfg.num_vpages, P, D),
-        dirty=s.dirty.at[jnp.where(local, v, V)].set(True),
+        dirty=s.dirty.at[jnp.where(valid & local, v, V)].set(True),
     )
 
 
@@ -694,9 +717,9 @@ def execute_paging_access(cfg: PlaneConfig, s: st.PlaneState,
     """Execute a Fastswap-analogue plan (built with ``split_by_psf=False``:
     every miss takes the paging path; no CAT, no object moves)."""
     scalar = _resolve(cfg, mode)
-    R = obj_ids.shape[0]
+    nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))
     s = s._replace(step=s.step + 1)
-    s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_pages,
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_pages,
                                  misses=plan.n_pages))
     # page-level recency only (no card profiling — that's the point)
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
@@ -722,9 +745,9 @@ def execute_object_access(cfg: PlaneConfig, s: st.PlaneState,
     caller-supplied ``reclaim`` (the object-level LRU egress loop) runs if
     frames are tight."""
     scalar = _resolve(cfg, mode)
-    R = obj_ids.shape[0]
+    nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))
     s = s._replace(step=s.step + 1)
-    s = s._replace(stats=st.bump(s.stats, hits=R - plan.n_objs,
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_objs,
                                  misses=plan.n_objs))
     s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)

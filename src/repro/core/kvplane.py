@@ -705,14 +705,58 @@ def jitted_attend_sparse(cfg: KVPlaneConfig, mode: str | None = None):
     return _jitted_attend_sparse(cfg, mode or cfg.fetch_mode)
 
 
+def _sharded_decode_body(cfg: KVPlaneConfig, mode, states, q, lengths):
+    """shard_map body of the sharded sparse decode: one shard's partial
+    attention + a deterministic all_gather combine.  Identical per-shard
+    math to ``sharded_sparse_decode`` (which emulates the gather as a
+    stacked-array reduction), so the two are bit-equivalent."""
+    s = jax.tree.map(lambda x: x[0], states)
+    d = lax.axis_index("far").astype(jnp.int32)
+    P, NP = cfg.page_tokens, cfg.num_pages
+    npages_global = (lengths[0] + P - 1) // P
+    first_token = d * NP * P
+    newest_global = jnp.maximum(npages_global - 1, 0)
+    newest_local = jnp.where(newest_global // NP == d,
+                             newest_global % NP, -1).astype(jnp.int32)
+    acc, m, l, s = attend_sparse_partial(cfg, s, q, first_token, lengths[0],
+                                         newest_local, mode=mode)
+    # deterministic flash-decoding combine: gather the partials in shard
+    # order and reduce with the same jnp ops as the vmapped oracle
+    accg = lax.all_gather(acc, "far")                    # [S, B, H, Dh]
+    mg = lax.all_gather(m, "far")
+    lg = lax.all_gather(l, "far")
+    m_star = mg.max(axis=0, keepdims=True)
+    w = jnp.exp(mg - m_star)
+    l_tot = (lg * w).sum(axis=0)
+    acc_tot = (accg * w).sum(axis=0)
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)
+    return out.astype(q.dtype), jax.tree.map(lambda x: x[None], s)
+
+
 @functools.lru_cache(maxsize=None)
-def _jitted_sharded_decode(cfg: KVPlaneConfig, mode: str):
-    return jax.jit(functools.partial(sharded_sparse_decode, cfg, mode=mode),
-                   donate_argnums=(0,))
+def _jitted_sharded_decode(cfg: KVPlaneConfig, mode: str, mesh):
+    if mesh is None:
+        return jax.jit(functools.partial(sharded_sparse_decode, cfg,
+                                         mode=mode),
+                       donate_argnums=(0,))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    sp = jax.tree.map(lambda _: P("far"),
+                      jax.eval_shape(functools.partial(init, cfg)))
+    fn = shard_map(functools.partial(_sharded_decode_body, cfg, mode),
+                   mesh=mesh, in_specs=(sp, P(), P()),
+                   out_specs=(P(), sp), check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
 
 
-def jitted_sharded_decode(cfg: KVPlaneConfig, mode: str | None = None):
-    return _jitted_sharded_decode(cfg, mode or cfg.fetch_mode)
+def jitted_sharded_decode(cfg: KVPlaneConfig, mode: str | None = None,
+                          mesh=None):
+    """Sharded sparse decode entry: ``mesh=None`` is the vmapped
+    single-device oracle; a ``far`` mesh (``launch.mesh.make_far_mesh``)
+    runs each plane shard on its own device via shard_map, attending its
+    slab partition locally and combining with an all_gather — the shared
+    sharded pool of the serving deployment."""
+    return _jitted_sharded_decode(cfg, mode or cfg.fetch_mode, mesh)
 
 
 def append_sharded(cfg: KVPlaneConfig, states, k_new, v_new, lengths):

@@ -160,7 +160,8 @@ def jitted_advance_epoch(cfg: PlaneConfig):
 # epoch governor (always-on profiling, adaptive path selection)
 # --------------------------------------------------------------------------
 
-def advance_epoch(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
+def advance_epoch(cfg: PlaneConfig, s: st.PlaneState, *,
+                  traffic=None) -> st.PlaneState:
     """Close one profiling epoch: fold the card-table window into the
     per-page CAR EMA (``kernels.cat_decay``), let the governor adapt the
     PSF threshold from the epoch's observed paging-vs-runtime traffic, and
@@ -179,16 +180,25 @@ def advance_epoch(cfg: PlaneConfig, s: st.PlaneState) -> st.PlaneState:
 
     The card table is cleared to open the next window (``page_out``
     therefore blends the instantaneous window CAR with the EMA).  Pure
-    vectorized state math — identical under both access modes."""
+    vectorized state math — identical under both access modes.
+
+    ``traffic``: optional ``(d_page, d_obj)`` float32 byte totals overriding
+    the locally-derived deltas — the sharded plane passes the GLOBAL
+    aggregate here so every shard's governor sees the same imbalance (and
+    their thresholds move in lockstep), while all other epoch state stays
+    per-shard."""
     allocated = s.backing != FREE
     ema = kops.cat_decay(s.cat, s.car_ema, s.alloc_count,
                          decay=cfg.car_decay, impl=cfg.kernel_impl)
     ema = jnp.where(allocated, ema, 0.0)
 
-    d_page = ((s.stats.page_ins - s.epoch_page_ins).astype(jnp.float32)
-              * cfg.page_bytes)
-    d_obj = ((s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
-             * cfg.row_bytes)
+    if traffic is None:
+        d_page = ((s.stats.page_ins - s.epoch_page_ins).astype(jnp.float32)
+                  * cfg.page_bytes)
+        d_obj = ((s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
+                 * cfg.row_bytes)
+    else:
+        d_page, d_obj = traffic
     total = d_page + d_obj
     imbalance = jnp.where(total > 0.0,
                           (d_page - d_obj) / jnp.maximum(total, 1.0), 0.0)

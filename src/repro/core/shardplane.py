@@ -1,0 +1,473 @@
+"""Sharded far tier: the hybrid data plane partitioned over a ``far`` axis.
+
+The single-device plane funnels every request batch through ONE slab and
+frame pool, so aggregate ingress bandwidth is capped at a single chip.
+This module partitions the vpage space across ``shards`` devices: shard
+``s`` owns global objects ``[s*O, (s+1)*O)`` (``O`` per-shard), a
+contiguous slab partition, its own frame pool, CAT/CAR/EMA profiling state
+and governor threshold — a complete per-shard ``PlaneState``, stacked on a
+leading shard axis and laid out with ``mesh.far_specs``.
+
+Access is a fixed-shape, round-based exchange (DESIGN.md §Sharded far
+tier):
+
+  1. **Pack** (per source shard): dedup the pending ids in
+     first-appearance order, bucket them by owner (``owner = id // O`` —
+     static, because fill pages are always allocated from the owner's own
+     partition, so objects never migrate across shards), and take the
+     first ``per_shard_budget`` per destination.  Overflow **spills** to
+     the next round (counted in ``stats.ingress_spills``); a duplicate
+     multiplicity rides along so the owner can account the collapsed
+     requests as hits exactly like the single plane does.
+  2. **all_to_all #1**: the ``[S, B]`` id buffers (and counts) transpose
+     source-major -> destination-major across the ``far`` axis.
+  3. **Serve** (per owner shard): translate to local ids and run today's
+     single-device plan-then-execute engine (``batch.access`` and the
+     Pallas kernels) against the shard's own partition — padded slots are
+     the engine's negative-id no-ops.
+  4. **all_to_all #2**: the demand rows return to their requesters, which
+     scatter them into request order.
+
+``rounds = ceil(shard_batch / per_shard_budget)`` is static, so every
+request is served within one ``access`` call no matter how skewed the
+batch; with the default budget (= ``shard_batch``) there is exactly one
+round and nothing ever spills.
+
+The governor aggregates globally: ``advance_epoch`` all-gathers each
+shard's epoch byte deltas and hands every shard the same ``(d_page,
+d_obj)`` total, so the adaptive thresholds move in lockstep (a
+deterministic psum — fixed summation order keeps it bit-reproducible).
+
+**Bit-equivalence discipline** (continuing ``mode="reference"`` from PRs
+1-3): every phase above is a plain per-shard function.  The single-device
+oracle runs them under ``vmap`` with the collectives emulated as
+transposes of the stacked arrays (``mesh=None``); the multi-device path
+runs the identical functions inside ``shard_map`` with ``lax.all_to_all``
+/ ``lax.all_gather``.  Both execute the same op sequence per shard, so
+rows AND full final state match bit-for-bit (tests/test_sharded.py), and
+``shards=1`` with the default budget degenerates to the plain plane —
+bitwise, stats included.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from . import baselines
+from . import batch as batch_lib
+from . import plane as plane_lib
+from . import state as st
+from .layout import FREE, PlaneConfig
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlaneConfig:
+    """Static description of a sharded plane (hashable / jit-static).
+
+    ``shard`` is the PER-SHARD plane config (local sizes); the global
+    object space is ``shards * shard.num_objs`` ids, owner-major."""
+
+    shard: PlaneConfig
+    shards: int                 # S: size of the `far` axis
+    shard_batch: int            # R: requests per shard per access call
+    per_shard_budget: int       # B: ids exchanged per (src, dst) per round
+    plane: str = "hybrid"       # hybrid | paging | object
+
+    def __post_init__(self):
+        assert self.shards >= 1
+        assert self.shard_batch >= 1
+        assert 1 <= self.per_shard_budget <= self.shard_batch
+        assert self.plane in ("hybrid", "paging", "object"), self.plane
+
+    @property
+    def rounds(self) -> int:
+        """Static round count: even if every pending id targets one owner,
+        ceil(R/B) rounds drain the worst-case per-destination queue."""
+        return -(-self.shard_batch // self.per_shard_budget)
+
+    @property
+    def num_objs(self) -> int:
+        return self.shards * self.shard.num_objs
+
+
+def shard_config(cfg: PlaneConfig, shards: int) -> PlaneConfig:
+    """Slice a GLOBAL plane config into the per-shard config: objects,
+    frames and vpages divide evenly across shards (asserted)."""
+    for field, n in (("num_objs", cfg.num_objs),
+                     ("num_frames", cfg.num_frames),
+                     ("num_vpages", cfg.num_vpages)):
+        assert n % shards == 0, (
+            f"{field}={n} must divide evenly across {shards} shards")
+    return dataclasses.replace(cfg, num_objs=cfg.num_objs // shards,
+                               num_frames=cfg.num_frames // shards,
+                               num_vpages=cfg.num_vpages // shards)
+
+
+def make_config(cfg: PlaneConfig, shards: int, shard_batch: int,
+                per_shard_budget: int | None = None,
+                plane: str = "hybrid") -> ShardedPlaneConfig:
+    """Build a sharded config from a GLOBAL plane config.  The default
+    budget (= ``shard_batch``) gives one exchange round and no spills."""
+    return ShardedPlaneConfig(
+        shard=shard_config(cfg, shards), shards=shards,
+        shard_batch=shard_batch,
+        per_shard_budget=per_shard_budget or shard_batch, plane=plane)
+
+
+def create(cfg: ShardedPlaneConfig, initial: jnp.ndarray) -> st.PlaneState:
+    """Stacked ``[S, ...]`` plane over the global ``[S*O, D]`` objects."""
+    return st.create_sharded(cfg.shard, cfg.shards, initial)
+
+
+# --------------------------------------------------------------------------
+# per-shard phases (shared verbatim by the vmap oracle and shard_map)
+# --------------------------------------------------------------------------
+
+def _pack_round(cfg: ShardedPlaneConfig, ids, todo):
+    """One shard's send buffers for one round.
+
+    ``ids [R]`` global object ids (< 0 = padding); ``todo [R]`` bool marks
+    requests not yet served.  Dedup in first-appearance order, bucket by
+    owner, keep the first ``B`` per destination; the rest spill.
+
+    Returns ``(send [S, B] ids (-1 pad), cnt [S, B] duplicate multiplicity,
+    todo' [R], n_spill [])``."""
+    S, B, R = cfg.shards, cfg.per_shard_budget, cfg.shard_batch
+    Os = cfg.shard.num_objs
+    first = batch_lib._first_of(ids, todo)
+    owner = jnp.where(first, ids // Os, S)
+    i = jnp.arange(R, dtype=jnp.int32)
+    ahead = ((owner[None, :] == owner[:, None]) & first[None, :]
+             & (i[None, :] < i[:, None]))
+    rank = jnp.sum(ahead.astype(jnp.int32), axis=1)   # per-destination rank
+    sent = first & (rank < B)
+    dst = jnp.where(sent, owner, S)                   # OOB scatter = drop
+    slot = jnp.where(sent, rank, 0)
+    send = jnp.full((S, B), -1, jnp.int32).at[dst, slot].set(ids)
+    flat = send.reshape(S * B)
+    # duplicate multiplicity: how many pending requests each sent id covers
+    # (the owner credits cnt-1 extra hits — single-plane dup-hit semantics)
+    cnt = jnp.sum((flat[:, None] == ids[None, :]) & todo[None, :], axis=1)
+    cnt = jnp.where(flat >= 0, cnt, 0).astype(jnp.int32).reshape(S, B)
+    served = jnp.any((ids[:, None] == flat[None, :]) & (flat[None, :] >= 0),
+                     axis=1)
+    n_spill = jnp.sum((first & ~sent).astype(jnp.int32))
+    return send, cnt, todo & ~served, n_spill
+
+
+def _serve_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, me, *, mode):
+    """Serve one round's received ids against this shard's own plane.
+    ``recv/recv_cnt [S, B]`` destination-major buffers; ``me`` the shard
+    index.  Returns ``(state, rows [S, B, D])`` (source-major again after
+    the reshape — row block ``j`` answers source shard ``j``)."""
+    S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
+    ok = recv >= 0
+    lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
+    if cfg.plane == "hybrid":
+        s, rows = batch_lib.access(cfg.shard, s, lids, mode=mode)
+    elif cfg.plane == "paging":
+        s, rows = batch_lib.paging_access(cfg.shard, s, lids, mode=mode)
+    else:
+        s, rows = baselines.object_access(cfg.shard, s, lids, mode=mode)
+    extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
+    s = s._replace(stats=st.bump(s.stats, hits=extra))
+    return s, rows.reshape(S, B, D)
+
+
+def _collect_round(cfg: ShardedPlaneConfig, out, ids, send, got):
+    """Scatter one round's returned rows into request order.  ``send [S,B]``
+    the ids this shard sent; ``got [S, B, D]`` their rows (back from the
+    owners); requests already served in earlier rounds match nothing and
+    keep their value."""
+    S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
+    flat = send.reshape(S * B)
+    rows = got.reshape(S * B, D)
+    match = (ids[:, None] == flat[None, :]) & (flat[None, :] >= 0)
+    j = jnp.argmax(match, axis=1)
+    hit = jnp.any(match, axis=1)
+    return jnp.where(hit[:, None], rows[j], out)
+
+
+def _pack_payload(cfg: ShardedPlaneConfig, ids, rows, send):
+    """Update payload for one round's send buffer: the LAST-occurrence row
+    of each sent id (the single plane's last-write-wins dedup)."""
+    S, B, R = cfg.shards, cfg.per_shard_budget, cfg.shard_batch
+    flat = send.reshape(S * B)
+    i = jnp.arange(R, dtype=jnp.int32)
+    match = (flat[:, None] == ids[None, :]) & (flat[:, None] >= 0)
+    j = jnp.max(jnp.where(match, i[None, :], -1), axis=1)
+    payload = rows[jnp.clip(j, 0, R - 1)]
+    payload = jnp.where((j >= 0)[:, None], payload, 0)
+    return payload.reshape(S, B, -1).astype(cfg.shard.dtype)
+
+
+def _serve_update_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, payload,
+                        me, *, mode):
+    """Apply one round's received writes to this shard's own plane."""
+    S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
+    ok = recv >= 0
+    lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
+    s = batch_lib.update(cfg.shard, s, lids, payload.reshape(S * B, D),
+                         mode=mode)
+    extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
+    return s._replace(stats=st.bump(s.stats, hits=extra))
+
+
+def _epoch_traffic(cfg: PlaneConfig, s) -> jnp.ndarray:
+    """One shard's ``[d_page_bytes, d_obj_bytes]`` since its last epoch."""
+    d_page = ((s.stats.page_ins - s.epoch_page_ins).astype(jnp.float32)
+              * cfg.page_bytes)
+    d_obj = ((s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
+             * cfg.row_bytes)
+    return jnp.stack([d_page, d_obj])
+
+
+def _bump_spills(states, spills):
+    return states._replace(stats=st.bump(states.stats,
+                                         ingress_spills=spills))
+
+
+# --------------------------------------------------------------------------
+# single-device oracle: vmap over shards, collectives as transposes
+# --------------------------------------------------------------------------
+
+def access(cfg: ShardedPlaneConfig, states, ids, *, mode=None):
+    """Sharded access on ONE device (the bit-equivalence oracle).
+
+    ``states``: stacked ``[S, ...]`` plane; ``ids [S, R]`` global object
+    ids per source shard (< 0 = padding).  Returns ``(states,
+    rows [S, R, D])`` in request order."""
+    S, R, D = cfg.shards, cfg.shard_batch, cfg.shard.obj_dim
+    todo = ids >= 0
+    out = jnp.zeros((S, R, D), cfg.shard.dtype)
+    spills = jnp.zeros((S,), jnp.int32)
+    me = jnp.arange(S, dtype=jnp.int32)
+    pack = jax.vmap(partial(_pack_round, cfg))
+    serve = jax.vmap(partial(_serve_round, cfg, mode=mode))
+    collect = jax.vmap(partial(_collect_round, cfg))
+    for _ in range(cfg.rounds):
+        send, cnt, todo, nsp = pack(ids, todo)
+        spills = spills + nsp
+        # the emulated all_to_all: [S(src), S(dst), B] -> [S(dst), S(src), B]
+        states, rows = serve(states, jnp.swapaxes(send, 0, 1),
+                             jnp.swapaxes(cnt, 0, 1), me)
+        out = collect(out, ids, send, jnp.swapaxes(rows, 0, 1))
+    return _bump_spills(states, spills), out
+
+
+def update(cfg: ShardedPlaneConfig, states, ids, rows, *, mode=None):
+    """Sharded write-through on ONE device (oracle).  ``rows [S, R, D]``."""
+    if cfg.plane != "hybrid":
+        raise ValueError("sharded update is a hybrid-plane operation")
+    S = cfg.shards
+    todo = ids >= 0
+    spills = jnp.zeros((S,), jnp.int32)
+    me = jnp.arange(S, dtype=jnp.int32)
+    pack = jax.vmap(partial(_pack_round, cfg))
+    payload_of = jax.vmap(partial(_pack_payload, cfg))
+    serve = jax.vmap(partial(_serve_update_round, cfg, mode=mode))
+    for _ in range(cfg.rounds):
+        send, cnt, todo, nsp = pack(ids, todo)
+        spills = spills + nsp
+        payload = payload_of(ids, rows, send)
+        states = serve(states, jnp.swapaxes(send, 0, 1),
+                       jnp.swapaxes(cnt, 0, 1),
+                       jnp.swapaxes(payload, 0, 1), me)
+    return _bump_spills(states, spills)
+
+
+def advance_epoch(cfg: ShardedPlaneConfig, states):
+    """Close one epoch on every shard with the GLOBAL traffic aggregate
+    (one device; fixed-order sum == the shard_map all_gather combine)."""
+    d = jax.vmap(partial(_epoch_traffic, cfg.shard))(states)   # [S, 2]
+    tot = jnp.sum(d, axis=0)
+    return jax.vmap(lambda s: plane_lib.advance_epoch(
+        cfg.shard, s, traffic=(tot[0], tot[1])))(states)
+
+
+def evacuate(cfg: ShardedPlaneConfig, states, garbage_threshold=None,
+             max_pages: int = 16, *, clear_access: bool = True):
+    """Per-shard compaction (no cross-shard traffic: objects re-pack onto
+    their owner's own fill pages)."""
+    return jax.vmap(partial(plane_lib.evacuate, cfg.shard,
+                            garbage_threshold=garbage_threshold,
+                            max_pages=max_pages,
+                            clear_access=clear_access))(states)
+
+
+# --------------------------------------------------------------------------
+# shard_map bodies: identical phases, lax collectives
+# --------------------------------------------------------------------------
+
+def _a2a(x):
+    return lax.all_to_all(x, "far", split_axis=0, concat_axis=0)
+
+
+def _access_body(cfg: ShardedPlaneConfig, mode, states, ids):
+    s = jax.tree.map(lambda x: x[0], states)
+    ids = ids[0]
+    me = lax.axis_index("far").astype(jnp.int32)
+    R, D = cfg.shard_batch, cfg.shard.obj_dim
+    todo = ids >= 0
+    out = jnp.zeros((R, D), cfg.shard.dtype)
+    spills = jnp.zeros((), jnp.int32)
+    for _ in range(cfg.rounds):
+        send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
+        spills = spills + nsp
+        s, rows = _serve_round(cfg, s, _a2a(send), _a2a(cnt), me, mode=mode)
+        out = _collect_round(cfg, out, ids, send, _a2a(rows))
+    s = _bump_spills(s, spills)
+    return jax.tree.map(lambda x: x[None], s), out[None]
+
+
+def _update_body(cfg: ShardedPlaneConfig, mode, states, ids, rows):
+    s = jax.tree.map(lambda x: x[0], states)
+    ids, rows = ids[0], rows[0]
+    me = lax.axis_index("far").astype(jnp.int32)
+    todo = ids >= 0
+    spills = jnp.zeros((), jnp.int32)
+    for _ in range(cfg.rounds):
+        send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
+        spills = spills + nsp
+        payload = _pack_payload(cfg, ids, rows, send)
+        s = _serve_update_round(cfg, s, _a2a(send), _a2a(cnt), _a2a(payload),
+                                me, mode=mode)
+    s = _bump_spills(s, spills)
+    return jax.tree.map(lambda x: x[None], s)
+
+
+def _epoch_body(cfg: ShardedPlaneConfig, states):
+    s = jax.tree.map(lambda x: x[0], states)
+    d = _epoch_traffic(cfg.shard, s)
+    # deterministic psum: all_gather + fixed-order sum, bit-identical to
+    # the oracle's jnp.sum over the stacked [S, 2] array
+    tot = jnp.sum(lax.all_gather(d, "far"), axis=0)
+    s = plane_lib.advance_epoch(cfg.shard, s, traffic=(tot[0], tot[1]))
+    return jax.tree.map(lambda x: x[None], s)
+
+
+def _evac_body(cfg: ShardedPlaneConfig, garbage_threshold, max_pages,
+               clear_access, states):
+    s = jax.tree.map(lambda x: x[0], states)
+    s = plane_lib.evacuate(cfg.shard, s, garbage_threshold=garbage_threshold,
+                           max_pages=max_pages, clear_access=clear_access)
+    return jax.tree.map(lambda x: x[None], s)
+
+
+# --------------------------------------------------------------------------
+# memoized jit entry points (mesh=None -> the single-device oracle)
+# --------------------------------------------------------------------------
+
+def _state_specs(cfg: ShardedPlaneConfig):
+    init = jax.ShapeDtypeStruct((cfg.num_objs, cfg.shard.obj_dim),
+                                cfg.shard.dtype)
+    tmpl = jax.eval_shape(partial(create, cfg), init)
+    return jax.tree.map(lambda _: P("far"), tmpl)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_access(cfg: ShardedPlaneConfig, mode, mesh):
+    if mesh is None:
+        return jax.jit(partial(access, cfg, mode=mode))
+    sp = _state_specs(cfg)
+    # check_rep=False: the plane engine contains fori/while loops, which
+    # shard_map's replication checker cannot rule on (the state is
+    # genuinely sharded anyway)
+    fn = shard_map(partial(_access_body, cfg, mode), mesh=mesh,
+                   in_specs=(sp, P("far")), out_specs=(sp, P("far")),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def jitted_access(cfg: ShardedPlaneConfig, mode=None, mesh=None):
+    """``(states, ids [S, R]) -> (states, rows [S, R, D])``; ``mesh=None``
+    runs the vmap oracle on one device, a ``far`` mesh runs shard_map."""
+    return _jitted_access(cfg, mode or cfg.shard.access_mode, mesh)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_update(cfg: ShardedPlaneConfig, mode, mesh):
+    if mesh is None:
+        return jax.jit(partial(update, cfg, mode=mode))
+    sp = _state_specs(cfg)
+    fn = shard_map(partial(_update_body, cfg, mode), mesh=mesh,
+                   in_specs=(sp, P("far"), P("far")), out_specs=sp,
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def jitted_update(cfg: ShardedPlaneConfig, mode=None, mesh=None):
+    return _jitted_update(cfg, mode or cfg.shard.access_mode, mesh)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_advance_epoch(cfg: ShardedPlaneConfig, mesh):
+    if mesh is None:
+        return jax.jit(partial(advance_epoch, cfg))
+    sp = _state_specs(cfg)
+    fn = shard_map(partial(_epoch_body, cfg), mesh=mesh, in_specs=(sp,),
+                   out_specs=sp, check_rep=False)
+    return jax.jit(fn)
+
+
+def jitted_advance_epoch(cfg: ShardedPlaneConfig, mesh=None):
+    return _jitted_advance_epoch(cfg, mesh)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_evacuate(cfg: ShardedPlaneConfig, garbage_threshold, max_pages,
+                     clear_access, mesh):
+    if mesh is None:
+        return jax.jit(partial(evacuate, cfg,
+                               garbage_threshold=garbage_threshold,
+                               max_pages=max_pages,
+                               clear_access=clear_access))
+    sp = _state_specs(cfg)
+    fn = shard_map(partial(_evac_body, cfg, garbage_threshold, max_pages,
+                           clear_access), mesh=mesh, in_specs=(sp,),
+                   out_specs=sp, check_rep=False)
+    return jax.jit(fn)
+
+
+def jitted_evacuate(cfg: ShardedPlaneConfig, garbage_threshold=None,
+                    max_pages: int = 16, clear_access: bool = True,
+                    mesh=None):
+    return _jitted_evacuate(cfg, garbage_threshold, max_pages, clear_access,
+                            mesh)
+
+
+# --------------------------------------------------------------------------
+# introspection
+# --------------------------------------------------------------------------
+
+def stats_total(states) -> st.PlaneStats:
+    """Global counters: sum each stat over the shard axis."""
+    return st.PlaneStats(*[jnp.sum(x, axis=0) for x in states.stats])
+
+
+def paging_fraction(cfg: ShardedPlaneConfig, states) -> jnp.ndarray:
+    """Fraction of allocated pages (across ALL shards) on the paging path."""
+    allocated = states.backing != FREE
+    pg = jnp.sum((states.psf & allocated).astype(jnp.int32))
+    return pg / jnp.maximum(jnp.sum(allocated.astype(jnp.int32)), 1)
+
+
+def check_invariants(cfg: ShardedPlaneConfig, states) -> dict:
+    """Per-shard structural invariants, AND-merged (host-side)."""
+    out: dict = {}
+    for i in range(cfg.shards):
+        for k, v in plane_lib.check_invariants(
+                cfg.shard, st.shard_slice(states, i)).items():
+            out[k] = out.get(k, True) and v
+    return out

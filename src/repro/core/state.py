@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,6 +31,8 @@ class PlaneStats(NamedTuple):
     prefetch_issued: jnp.ndarray # prefetch page-ins (subset of page_ins)
     prefetch_used: jnp.ndarray   # prefetched pages later hit by a demand access
     epochs: jnp.ndarray          # advance_epoch invocations (governor runs)
+    ingress_spills: jnp.ndarray  # sharded-exchange requests deferred a round
+    #                              (per_shard_budget overflow, shardplane)
 
     @classmethod
     def zeros(cls) -> "PlaneStats":
@@ -147,3 +150,26 @@ def create(cfg: PlaneConfig, initial: jnp.ndarray) -> PlaneState:
 def bump(stats: PlaneStats, **deltas) -> PlaneStats:
     """Increment named counters."""
     return stats._replace(**{k: getattr(stats, k) + v for k, v in deltas.items()})
+
+
+# --------------------------------------------------------------------------
+# shard-aware layout (the sharded far tier, repro.core.shardplane)
+# --------------------------------------------------------------------------
+
+def create_sharded(cfg: PlaneConfig, shards: int,
+                   initial: jnp.ndarray) -> PlaneState:
+    """Stacked ``[shards, ...]`` plane state: shard ``s`` owns global objects
+    ``[s*O, (s+1)*O)`` (``O = cfg.num_objs`` is the PER-SHARD capacity), its
+    own contiguous slab partition, frame pool, CAT/CAR/EMA profiling state
+    and governor threshold.  ``cfg`` is the per-shard config; ``initial`` is
+    the GLOBAL ``[shards*O, D]`` object array, split contiguously."""
+    O, D = cfg.num_objs, cfg.obj_dim
+    assert initial.shape == (shards * O, D), (initial.shape, (shards * O, D))
+    return jax.vmap(lambda part: create(cfg, part))(
+        initial.reshape(shards, O, D))
+
+
+def shard_slice(state: PlaneState, i: int) -> PlaneState:
+    """One shard's plane from a stacked ``[shards, ...]`` state (host-side
+    introspection / per-shard invariant checks)."""
+    return jax.tree.map(lambda x: x[i], state)

@@ -4,26 +4,71 @@ Logical spec axes used throughout the model code:
   * ``"dp"`` — data/FSDP; resolves to ``("pod", "data")`` when a pod axis
     exists, else ``("data",)``.
   * ``"tp"`` — tensor parallel; resolves to ``"model"``.
+  * ``"far"`` — the sharded far tier (repro.core.shardplane): a dedicated
+    1-D mesh axis over which the hybrid data plane's slab partitions, frame
+    pools and profiling state are sharded (``far_specs`` builds the
+    PartitionSpec trees for the stacked ``PlaneState``/``KVPlaneState``).
 
 Nothing in this module touches jax device state at import time.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    """Mesh shaped from the VISIBLE device count (the seed hardcoded
+    ``(16, 16)`` / ``(2, 16, 16)`` and failed on anything else).
+
+    The model axis gets the largest power-of-two factor of the device count
+    up to 16 (the production TP width); data parallelism takes the rest.
+    With ``multi_pod`` a leading pod axis of 2 is split off first when the
+    count allows it.  On 256 / 512 devices this reproduces the original
+    shapes exactly."""
+    n = jax.device_count()
+    if multi_pod:
+        pods = 2 if n % 2 == 0 and n >= 2 else 1
+        per_pod = n // pods
+        model = math.gcd(per_pod, 16)
+        return jax.make_mesh((pods, per_pod // model, model),
+                             ("pod", "data", "model"))
+    model = math.gcd(n, 16)
+    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over the locally visible devices (tests / examples)."""
+    n = jax.device_count()
+    if data * model > n:
+        raise ValueError(
+            f"make_host_mesh(data={data}, model={model}) needs "
+            f"{data * model} devices but only {n} are visible; lower the "
+            "mesh size or simulate devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_far_mesh(shards: int) -> Mesh:
+    """1-D mesh over the ``far`` axis for the sharded data plane.  Uses the
+    first ``shards`` visible devices (a plane may occupy a submesh)."""
+    n = jax.device_count()
+    if shards > n:
+        raise ValueError(
+            f"make_far_mesh(shards={shards}) needs {shards} devices but "
+            f"only {n} are visible; lower the shard count or simulate "
+            "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return Mesh(np.asarray(jax.devices()[:shards]), ("far",))
+
+
+def far_specs(tree):
+    """PartitionSpec tree sharding every leaf's leading axis over ``far`` —
+    the layout of a stacked ``[shards, ...]`` plane state pytree."""
+    return jax.tree.map(lambda _: P("far"), tree)
 
 
 # Logical-axis layout: "2d" (default) = FSDP over (pod, data) x TP over

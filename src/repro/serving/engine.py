@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, plane as plane_lib
+from repro.core import baselines, plane as plane_lib, shardplane
 from repro.core.layout import PlaneConfig
 from repro.core import state as state_lib
 
@@ -67,6 +67,23 @@ class EngineConfig:
     # Epoch governor: advance_epoch every this many ticks (hybrid plane;
     # 0 = off).  Dispatched async like everything else.
     epoch_every: int = 0
+    # Load-aware epoch scheduling: close an epoch once the plane has moved
+    # this many bytes (paging + object traffic) since the last one (0 =
+    # off).  A wall-clock tick schedule under-profiles churn bursts and
+    # over-profiles idle stretches; the watermark keys the governor to the
+    # traffic that actually moves its thresholds.  ``epoch_every`` stays on
+    # as the idle-time fallback.  The probe is an async device read polled
+    # with ``is_ready()`` so pipelined dispatch never blocks on it.
+    epoch_watermark_bytes: int = 0
+    # Sharded far tier: partition the plane over this many devices (1 =
+    # the single-device plane).  ``batch`` splits evenly across shards
+    # (each shard sources batch/shards requests per tick) and access runs
+    # the round-based exchange of repro.core.shardplane — on a ``far``
+    # mesh when the Engine gets one, else on the vmap oracle.
+    shards: int = 1
+    # Per-(src, dst) id budget per exchange round (0 = auto: one round,
+    # budget = batch/shards, nothing ever spills).
+    shard_budget: int = 0
 
 
 class LatencyTracker:
@@ -99,14 +116,48 @@ class Engine:
     (submit + drain + return rows)."""
 
     def __init__(self, cfg: EngineConfig, pcfg: PlaneConfig,
-                 initial: jnp.ndarray):
+                 initial: jnp.ndarray, mesh=None):
         self.cfg = cfg
         self.pcfg = pcfg
-        self.state = state_lib.create(pcfg, initial)
+        self.scfg = None
+        sharded = cfg.shards > 1
+        epoch_on = (cfg.plane == "hybrid"
+                    and (cfg.epoch_every > 0 or cfg.epoch_watermark_bytes > 0))
         # memoized jit entry points: engines sharing a PlaneConfig share one
         # compiled executable per op (continuous batching spins up several)
+        self._plan = self._exec = self._access = None
+        self._evac = self._epoch = self._traffic = None
         self._evac_slice = self._evac_slice_clear = None
-        if cfg.plane == "hybrid":
+        if sharded:
+            assert cfg.batch % cfg.shards == 0, (
+                f"batch={cfg.batch} must split evenly over "
+                f"{cfg.shards} shards")
+            self.scfg = scfg = shardplane.make_config(
+                pcfg, cfg.shards, cfg.batch // cfg.shards,
+                cfg.shard_budget or None, plane=cfg.plane)
+            self.state = shardplane.create(scfg, initial)
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                self.state = jax.device_put(self.state, jax.tree.map(
+                    lambda _: NamedSharding(mesh, PartitionSpec("far")),
+                    self.state))
+            # fused access: the exchange already interleaves plan+execute
+            # per round, so there is no host-visible plan/execute split
+            self._access = shardplane.jitted_access(scfg, cfg.mode, mesh)
+            if cfg.plane == "hybrid":
+                self._evac = shardplane.jitted_evacuate(scfg, mesh=mesh)
+                if cfg.evac_budget > 0:
+                    self._evac_slice = shardplane.jitted_evacuate(
+                        scfg, max_pages=cfg.evac_budget, clear_access=False,
+                        mesh=mesh)
+                    self._evac_slice_clear = shardplane.jitted_evacuate(
+                        scfg, max_pages=cfg.evac_budget, clear_access=True,
+                        mesh=mesh)
+                if epoch_on:
+                    self._epoch = shardplane.jitted_advance_epoch(scfg, mesh)
+            tcfg = scfg.shard
+        elif cfg.plane == "hybrid":
+            self.state = state_lib.create(pcfg, initial)
             self._plan = plane_lib.jitted_plan_access(pcfg)
             self._exec = plane_lib.jitted_execute_access(pcfg, cfg.mode)
             self._evac = plane_lib.jitted_evacuate(pcfg)
@@ -120,28 +171,48 @@ class Engine:
                     pcfg, max_pages=cfg.evac_budget, clear_access=False)
                 self._evac_slice_clear = plane_lib.jitted_evacuate(
                     pcfg, max_pages=cfg.evac_budget, clear_access=True)
-                slices = -(-16 // cfg.evac_budget)      # ceil(16/budget)
-                self._evac_slice_period = max(1, cfg.evac_every // slices)
-                self._evac_round = 0    # last round whose access-clear ran
-            self._epoch = (plane_lib.jitted_advance_epoch(pcfg)
-                           if cfg.epoch_every > 0 else None)
+            if epoch_on:
+                self._epoch = plane_lib.jitted_advance_epoch(pcfg)
+            tcfg = pcfg
         elif cfg.plane == "paging":
+            self.state = state_lib.create(pcfg, initial)
             self._plan = baselines.jitted_plan_paging(pcfg)
             self._exec = baselines.jitted_execute_paging(pcfg, cfg.mode)
-            self._evac = self._epoch = None
+            tcfg = pcfg
         elif cfg.plane == "object":
+            self.state = state_lib.create(pcfg, initial)
             self._plan = baselines.jitted_plan_object(pcfg)
             self._exec = baselines.jitted_execute_object(pcfg, cfg.mode)
-            self._evac = self._epoch = None
+            tcfg = pcfg
         else:
             raise ValueError(cfg.plane)
+        if self._evac_slice is not None:
+            slices = -(-16 // cfg.evac_budget)          # ceil(16/budget)
+            self._evac_slice_period = max(1, cfg.evac_every // slices)
+            self._evac_round = 0        # last round whose access-clear ran
+        if self._epoch is not None and cfg.epoch_watermark_bytes > 0:
+            # bytes moved (paging + object ingress) since the last epoch —
+            # the same deltas advance_epoch profiles; sharded states sum
+            # elementwise over the stacked [S] counters
+            pb, rb = float(tcfg.page_bytes), float(tcfg.row_bytes)
+            self._traffic = jax.jit(lambda s: jnp.sum(
+                (s.stats.page_ins - s.epoch_page_ins).astype(jnp.float32)
+                * pb
+                + (s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
+                * rb))
+        self._probe = None              # in-flight traffic watermark read
         self.latency = LatencyTracker()
         self.ticks = 0
         self._inflight: deque = deque()     # (t_sched, rows, n) oldest-first
         # warm the compiled paths so the first request doesn't pay jit time
-        warm = jnp.zeros((cfg.batch,), jnp.int32)
-        self.state, _ = self._exec(self.state, warm, self._plan(self.state,
-                                                                warm))
+        if sharded:
+            warm = jnp.zeros((cfg.shards, cfg.batch // cfg.shards),
+                             jnp.int32)
+            self.state, _ = self._access(self.state, warm)
+        else:
+            warm = jnp.zeros((cfg.batch,), jnp.int32)
+            self.state, _ = self._exec(self.state, warm,
+                                       self._plan(self.state, warm))
         if self._evac is not None:
             self.state = self._evac(self.state)
         if self._evac_slice is not None:
@@ -150,8 +221,10 @@ class Engine:
             jax.block_until_ready(self._evac_slice_clear(self.state))
         if self._epoch is not None:
             jax.block_until_ready(self._epoch(self.state))
+        if self._traffic is not None:
+            jax.block_until_ready(self._traffic(self.state))
         self.state = self.state._replace(
-            stats=state_lib.PlaneStats.zeros(),
+            stats=jax.tree.map(jnp.zeros_like, self.state.stats),
             epoch_page_ins=jnp.zeros_like(self.state.epoch_page_ins),
             epoch_obj_ins=jnp.zeros_like(self.state.epoch_obj_ins))
 
@@ -171,11 +244,23 @@ class Engine:
         while self._inflight and self._inflight[0][1].is_ready():
             self._retire_one()
         ids = jnp.asarray(obj_ids, jnp.int32)
-        # two async device calls: the plan dispatch is what a sharded
-        # deployment runs host-side / on a prefetch stream
-        plan = self._plan(self.state, ids)
-        self.state, rows = self._exec(self.state, ids, plan)
-        self._inflight.append((t_sched, rows, len(obj_ids)))
+        n = len(obj_ids)
+        if self._access is not None:
+            # sharded far tier: the batch splits evenly across source
+            # shards; short batches pad with the engine's negative-id
+            # no-ops (fixed shapes keep one compiled program)
+            S, R = self.cfg.shards, self.cfg.batch // self.cfg.shards
+            if n < self.cfg.batch:
+                ids = jnp.concatenate(
+                    [ids, jnp.full((self.cfg.batch - n,), -1, jnp.int32)])
+            self.state, out = self._access(self.state, ids.reshape(S, R))
+            rows = out.reshape(self.cfg.batch, -1)[:n]
+        else:
+            # two async device calls: the plan dispatch is what a sharded
+            # deployment runs host-side / on a prefetch stream
+            plan = self._plan(self.state, ids)
+            self.state, rows = self._exec(self.state, ids, plan)
+        self._inflight.append((t_sched, rows, n))
         self.ticks += 1
         if self._evac is not None:
             if self.cfg.evac_budget > 0:
@@ -198,12 +283,35 @@ class Engine:
                         self.state = self._evac_slice(self.state)
             elif self.ticks % self.cfg.evac_every == 0:
                 self.state = self._evac(self.state)
-        if self._epoch is not None and self.ticks % self.cfg.epoch_every == 0:
+        if self._epoch is not None and self._epoch_due():
             self.state = self._epoch(self.state)
+            self._probe = None          # watermark restarts from the epoch
         limit = 0 if self.cfg.dispatch == "sync" else self.cfg.pipeline_depth
         while len(self._inflight) > limit:
             self._retire_one()
         return rows
+
+    def _epoch_due(self) -> bool:
+        """Load-aware epoch schedule: the tick period (``epoch_every``) is
+        the fallback; the byte watermark fires as soon as an async traffic
+        probe reads past ``epoch_watermark_bytes`` — churn bursts advance
+        epochs faster than the wall-clock schedule, idle stretches don't
+        churn the governor.  Pipelined dispatch never blocks here: the
+        probe is polled with ``is_ready()`` and acted on a tick late."""
+        cfg = self.cfg
+        if cfg.epoch_every > 0 and self.ticks % cfg.epoch_every == 0:
+            return True
+        if self._traffic is None:
+            return False
+        if self._probe is None:
+            self._probe = self._traffic(self.state)
+            if cfg.dispatch != "sync":
+                return False            # poll on a later tick
+        if cfg.dispatch == "sync" or self._probe.is_ready():
+            due = float(self._probe) >= cfg.epoch_watermark_bytes
+            self._probe = None
+            return due
+        return False
 
     def _retire_one(self):
         t_sched, rows, n = self._inflight.popleft()
@@ -252,8 +360,13 @@ class Engine:
                 t_sched = None
             self.submit(batch, t_sched=t_sched)
         self.drain()
+        if self.scfg is not None:
+            raw = shardplane.stats_total(self.state)
+            pf = shardplane.paging_fraction(self.scfg, self.state)
+        else:
+            raw = self.state.stats
+            pf = plane_lib.paging_fraction(self.pcfg, self.state)
         stats = {k: int(v) for k, v in
-                 jax.device_get(self.state.stats)._asdict().items()}
+                 jax.device_get(raw)._asdict().items()}
         return {"latency": self.latency.summary(), "stats": stats,
-                "paging_fraction": float(
-                    plane_lib.paging_fraction(self.pcfg, self.state))}
+                "paging_fraction": float(pf)}

@@ -1,0 +1,345 @@
+"""Sharded far tier (repro.core.shardplane).
+
+Two layers of bit-equivalence, mirroring the plan/execute discipline:
+
+  * always-on (1 device): the vmapped sharded oracle serves ground-truth
+    rows on random / skewed / sequential workloads, degenerates to the
+    plain plane BITWISE (stats included) at ``shards=1``, spills + drains
+    overflow under a small exchange budget, and moves every shard's
+    governor threshold in lockstep.
+  * 8 simulated devices (CI job tier1-sharded, XLA_FLAGS=
+    --xla_force_host_platform_device_count=8): the shard_map data path is
+    bit-identical to the oracle — rows and full final state — for
+    shards in {2, 4, 8}, including the spill path, update, the epoch
+    all_gather, evacuation, the kvplane sharded decode, and the serving
+    engine end to end.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batch as batch_lib
+from repro.core import kvplane, plane as plane_lib, shardplane
+from repro.core import state as state_lib
+from repro.core.layout import PlaneConfig
+from repro.launch import mesh as mesh_lib
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+O, D, R = 256, 8, 16            # global objects / row dim / per-shard batch
+GCFG = PlaneConfig(num_objs=O, obj_dim=D, page_objs=4, num_frames=48,
+                   num_vpages=192)
+
+
+def initial_data():
+    return jnp.arange(O * D, dtype=jnp.float32).reshape(O, D)
+
+
+def workload(name, shards, steps, seed=0):
+    """[steps, shards, R] global object ids (may include duplicates)."""
+    rng = np.random.default_rng(seed)
+    n = steps * shards * R
+    if name == "random":
+        ids = rng.integers(0, O, size=n)
+    elif name == "skewed":
+        ids = rng.zipf(1.5, size=n) % O
+    else:                                           # sequential scan
+        ids = np.arange(n) % O
+    return ids.reshape(steps, shards, R).astype(np.int32)
+
+
+def assert_trees_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} leaf {i}")
+
+
+# --------------------------------------------------------------------------
+# single-device oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [2, 4, 8])
+@pytest.mark.parametrize("wl", ["random", "skewed", "sequential"])
+def test_sharded_rows_ground_truth(shards, wl):
+    scfg = shardplane.make_config(GCFG, shards, R)
+    data = initial_data()
+    states = shardplane.create(scfg, data)
+    acc = shardplane.jitted_access(scfg)
+    for ids in workload(wl, shards, steps=8, seed=shards):
+        states, rows = acc(states, jnp.asarray(ids))
+        np.testing.assert_array_equal(
+            np.asarray(rows).reshape(shards * R, D),
+            np.asarray(data)[ids.reshape(-1)])
+    assert all(shardplane.check_invariants(scfg, states).values())
+    assert int(shardplane.stats_total(states).ingress_spills) == 0
+
+
+def test_shards1_matches_plain_plane_bitwise():
+    """shards=1, default budget: the exchange is a no-op wrapper and the
+    sharded plane IS the plain plane — rows, state and every stat."""
+    scfg = shardplane.make_config(GCFG, 1, R)
+    data = initial_data()
+    states = shardplane.create(scfg, data)
+    plain = state_lib.create(GCFG, data)
+    acc = shardplane.jitted_access(scfg)
+    rng = np.random.default_rng(3)
+    for t in range(12):
+        ids = rng.integers(0, O, size=R).astype(np.int32)
+        ids[1] = ids[0]                             # force duplicates
+        states, rows_s = acc(states, jnp.asarray(ids)[None])
+        plain, rows_p = batch_lib.access(GCFG, plain, jnp.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(rows_s)[0],
+                                      np.asarray(rows_p), err_msg=f"t={t}")
+    assert_trees_equal(state_lib.shard_slice(states, 0), plain,
+                       "shards=1 state")
+
+
+def test_spill_path_serves_and_counts():
+    """budget < shard_batch with every id hitting one owner: overflow
+    spills to later rounds (counted), yet every request is served within
+    the one access call."""
+    shards = 4
+    scfg = shardplane.make_config(GCFG, shards, R, per_shard_budget=3)
+    assert scfg.rounds == 6
+    data = initial_data()
+    states = shardplane.create(scfg, data)
+    acc = shardplane.jitted_access(scfg)
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        # all requests target owner shard 0's objects -> worst-case skew
+        ids = rng.integers(0, O // shards, size=(shards, R)).astype(np.int32)
+        states, rows = acc(states, jnp.asarray(ids))
+        np.testing.assert_array_equal(
+            np.asarray(rows).reshape(-1, D), np.asarray(data)[ids.reshape(-1)])
+    assert int(shardplane.stats_total(states).ingress_spills) > 0
+    assert all(shardplane.check_invariants(scfg, states).values())
+
+
+def test_sharded_padding_rows_are_noops():
+    scfg = shardplane.make_config(GCFG, 2, R)
+    states = shardplane.create(scfg, initial_data())
+    ids = np.full((2, R), -1, np.int32)
+    ids[0, 0], ids[1, 3] = 7, 200
+    states2, rows = shardplane.jitted_access(scfg)(states, jnp.asarray(ids))
+    rows = np.asarray(rows)
+    assert np.all(rows[0, 1:] == 0) and np.all(rows[1, :3] == 0)
+    np.testing.assert_array_equal(rows[0, 0],
+                                  np.asarray(initial_data())[7])
+    assert int(shardplane.stats_total(states2).hits
+               + shardplane.stats_total(states2).misses) == 2
+
+
+def test_sharded_update_shards1_matches_plain():
+    scfg = shardplane.make_config(GCFG, 1, R)
+    data = initial_data()
+    states = shardplane.create(scfg, data)
+    plain = state_lib.create(GCFG, data)
+    upd = shardplane.jitted_update(scfg)
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        ids = rng.integers(0, O, size=R).astype(np.int32)
+        ids[2] = ids[0]                             # duplicate write
+        rows = rng.normal(size=(R, D)).astype(np.float32)
+        states = upd(states, jnp.asarray(ids)[None], jnp.asarray(rows)[None])
+        plain = batch_lib.update(GCFG, plain, jnp.asarray(ids),
+                                 jnp.asarray(rows))
+    assert_trees_equal(state_lib.shard_slice(states, 0), plain,
+                       "shards=1 update state")
+
+
+def test_sharded_update_then_read_back():
+    shards = 4
+    scfg = shardplane.make_config(GCFG, shards, R)
+    data = initial_data()
+    states = shardplane.create(scfg, data)
+    rng = np.random.default_rng(6)
+    ids = rng.permutation(O)[:shards * R].reshape(shards, R).astype(np.int32)
+    rows = rng.normal(size=(shards, R, D)).astype(np.float32)
+    states = shardplane.jitted_update(scfg)(states, jnp.asarray(ids),
+                                            jnp.asarray(rows))
+    states, got = shardplane.jitted_access(scfg)(states, jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(got), rows)
+    assert all(shardplane.check_invariants(scfg, states).values())
+
+
+def test_epoch_thresholds_move_in_lockstep():
+    """The governor sees the GLOBAL traffic aggregate, so every shard's
+    adaptive threshold takes the same trajectory even under skew that
+    loads one shard only."""
+    shards = 4
+    scfg = shardplane.make_config(GCFG, shards, R)
+    states = shardplane.create(scfg, initial_data())
+    acc = shardplane.jitted_access(scfg)
+    ep = shardplane.jitted_advance_epoch(scfg)
+    rng = np.random.default_rng(9)
+    for _ in range(6):
+        ids = rng.integers(0, O // shards, size=(shards, R)).astype(np.int32)
+        states, _ = acc(states, jnp.asarray(ids))
+        states = ep(states)
+    thr = np.asarray(states.car_thr)
+    assert thr.shape[0] == shards
+    assert np.all(thr == thr[0])
+    assert int(shardplane.stats_total(states).epochs) == 6 * shards
+
+
+@pytest.mark.parametrize("plane", ["hybrid", "paging"])
+def test_sharded_batch_matches_reference(plane):
+    """mode='batch' (the vectorized engine) == mode='reference' (the
+    scalar oracle) through the sharded exchange too."""
+    scfg = shardplane.make_config(GCFG, 2, R, plane=plane)
+    data = initial_data()
+    sb = shardplane.create(scfg, data)
+    sr = shardplane.create(scfg, data)
+    ab = shardplane.jitted_access(scfg, mode="batch")
+    ar = shardplane.jitted_access(scfg, mode="reference")
+    for ids in workload("skewed", 2, steps=5, seed=21):
+        sb, rb = ab(sb, jnp.asarray(ids))
+        sr, rr = ar(sr, jnp.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(rb), np.asarray(rr))
+    assert_trees_equal(sb, sr, f"batch-vs-reference ({plane})")
+
+
+# --------------------------------------------------------------------------
+# mesh construction helpers
+# --------------------------------------------------------------------------
+
+def test_make_host_mesh_raises_past_device_count():
+    n = jax.device_count()
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        mesh_lib.make_host_mesh(data=n + 1, model=1)
+
+
+def test_make_far_mesh_raises_past_device_count():
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        mesh_lib.make_far_mesh(jax.device_count() + 1)
+
+
+def test_make_production_mesh_sizes_to_device_count():
+    mesh = mesh_lib.make_production_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.size == jax.device_count()
+
+
+# --------------------------------------------------------------------------
+# 8 simulated devices: shard_map vs oracle
+# --------------------------------------------------------------------------
+
+def _put_far(states, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.device_put(states, jax.tree.map(
+        lambda _: NamedSharding(mesh, P("far")), states))
+
+
+@needs8
+@pytest.mark.parametrize("shards", [2, 4, 8])
+@pytest.mark.parametrize("plane,budget", [("hybrid", None), ("hybrid", 3),
+                                          ("paging", None)])
+def test_shard_map_access_bitwise(shards, plane, budget):
+    scfg = shardplane.make_config(GCFG, shards, R, per_shard_budget=budget,
+                                  plane=plane)
+    data = initial_data()
+    s_emu = shardplane.create(scfg, data)
+    mesh = mesh_lib.make_far_mesh(shards)
+    s_dev = _put_far(s_emu, mesh)
+    a_emu = shardplane.jitted_access(scfg)
+    a_dev = shardplane.jitted_access(scfg, mesh=mesh)
+    for t, ids in enumerate(workload("skewed", shards, steps=6, seed=31)):
+        s_emu, r_emu = a_emu(s_emu, jnp.asarray(ids))
+        s_dev, r_dev = a_dev(s_dev, jnp.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(r_emu), np.asarray(r_dev),
+                                      err_msg=f"rows t={t}")
+    assert_trees_equal(s_emu, s_dev, f"state ({plane}, budget={budget})")
+    if budget is not None:
+        assert int(shardplane.stats_total(s_dev).ingress_spills) > 0
+
+
+@needs8
+@pytest.mark.parametrize("shards", [2, 8])
+def test_shard_map_update_epoch_evacuate_bitwise(shards):
+    scfg = shardplane.make_config(GCFG, shards, R)
+    data = initial_data()
+    s_emu = shardplane.create(scfg, data)
+    mesh = mesh_lib.make_far_mesh(shards)
+    s_dev = _put_far(s_emu, mesh)
+    acc = (shardplane.jitted_access(scfg),
+           shardplane.jitted_access(scfg, mesh=mesh))
+    upd = (shardplane.jitted_update(scfg),
+           shardplane.jitted_update(scfg, mesh=mesh))
+    ep = (shardplane.jitted_advance_epoch(scfg),
+          shardplane.jitted_advance_epoch(scfg, mesh=mesh))
+    ev = (shardplane.jitted_evacuate(scfg, max_pages=4),
+          shardplane.jitted_evacuate(scfg, max_pages=4, mesh=mesh))
+    rng = np.random.default_rng(41)
+    for t in range(6):
+        ids = rng.integers(0, O, size=(shards, R)).astype(np.int32)
+        s_emu, _ = acc[0](s_emu, jnp.asarray(ids))
+        s_dev, _ = acc[1](s_dev, jnp.asarray(ids))
+        rows = rng.normal(size=(shards, R, D)).astype(np.float32)
+        s_emu = upd[0](s_emu, jnp.asarray(ids), jnp.asarray(rows))
+        s_dev = upd[1](s_dev, jnp.asarray(ids), jnp.asarray(rows))
+        if t % 2 == 1:
+            s_emu, s_dev = ep[0](s_emu), ep[1](s_dev)
+            s_emu, s_dev = ev[0](s_emu), ev[1](s_dev)
+    assert_trees_equal(s_emu, s_dev, "update/epoch/evac state")
+
+
+@needs8
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_kvplane_shard_map_decode_bitwise(shards):
+    cfg = kvplane.KVPlaneConfig(kv_heads=1, head_dim=8, page_tokens=4,
+                                num_pages=8, num_frames=3, batch=1,
+                                sparse_topk=3, fetch_budget=2,
+                                car_threshold=0.5, dtype=jnp.float32)
+    key = jax.random.PRNGKey(shards)
+    s_emu = jax.vmap(lambda _: kvplane.init(cfg))(jnp.arange(shards))
+    mesh = mesh_lib.make_far_mesh(shards)
+    s_dev = _put_far(s_emu, mesh)
+    dec = (kvplane.jitted_sharded_decode(cfg),
+           kvplane.jitted_sharded_decode(cfg, mesh=mesh))
+    app = jax.jit(functools.partial(kvplane.append_sharded, cfg))
+    for t in range(18):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        kn = jax.random.normal(k1, (1, 1, 8), jnp.float32)
+        vn = jax.random.normal(k2, (1, 1, 8), jnp.float32)
+        L = jnp.array([t], jnp.int32)
+        s_emu = app(s_emu, kn, vn, L)
+        s_dev = app(s_dev, kn, vn, L)
+        if t % 3 == 2:
+            q = jax.random.normal(k3, (1, 1, 8), jnp.float32)
+            o_emu, s_emu = dec[0](s_emu, q, L + 1)
+            o_dev, s_dev = dec[1](s_dev, q, L + 1)
+            np.testing.assert_array_equal(np.asarray(o_emu),
+                                          np.asarray(o_dev),
+                                          err_msg=f"decode t={t}")
+    assert_trees_equal(s_emu, s_dev, "kv state")
+
+
+@needs8
+def test_engine_sharded_mesh_serves_plain_rows():
+    """End to end: a 4-shard engine on a far mesh returns the same rows as
+    the plain single-device engine (read path + maintenance running)."""
+    from repro.serving.engine import Engine, EngineConfig
+    data = initial_data()
+    B = 64
+    mk = lambda **kw: Engine(EngineConfig(plane="hybrid", batch=B,
+                                          evac_every=8, epoch_every=10,
+                                          dispatch="sync", **kw),
+                             GCFG, data,
+                             **({} if "shards" not in kw else
+                                {"mesh": mesh_lib.make_far_mesh(
+                                    kw["shards"])}))
+    e0, e4 = mk(), mk(shards=4)
+    rng = np.random.default_rng(51)
+    for _ in range(10):
+        ids = rng.integers(0, O, size=B)
+        np.testing.assert_array_equal(np.asarray(e0.serve_batch(ids)),
+                                      np.asarray(e4.serve_batch(ids)))
+    r = e4.run([], 0.0)
+    assert r["stats"]["hits"] + r["stats"]["misses"] == 10 * B
