@@ -49,8 +49,8 @@ def main() -> None:
 
     from benchmarks import (fig1c_eviction, fig4_throughput, fig56_latency,
                             fig7_psf, fig9_overhead, fig10_car,
-                            fig11_hotness, fig_prefetch, fig_shard, kvdecode,
-                            roofline)
+                            fig11_hotness, fig_faults, fig_prefetch,
+                            fig_shard, kvdecode, roofline)
 
     figures = {
         "fig1c": fig1c_eviction.run,
@@ -60,6 +60,7 @@ def main() -> None:
         "fig9": fig9_overhead.run,
         "fig10": fig10_car.run,
         "fig11": fig11_hotness.run,
+        "fig_faults": fig_faults.run,
         "fig_prefetch": fig_prefetch.run,
         "fig_shard": fig_shard.run,
         "kvdecode": kvdecode.run,

@@ -10,6 +10,7 @@ Public surface:
 * :mod:`repro.core.shardplane` — the plane sharded over a ``far`` mesh axis
 * :mod:`repro.core.sync`      — deref-count (pin) protocol, live-lock guard
 * :mod:`repro.core.offload`   — far-side computation (offload space analogue)
+* :mod:`repro.core.faults`    — deterministic fault model (chaos schedule)
 * :mod:`repro.core.kvplane`   — production tiered KV cache (serve path)
 * :mod:`repro.core.expertplane` — production tiered MoE expert store
 """
@@ -27,7 +28,7 @@ from .baselines import (paging_access, object_access, object_reclaim,
                         jitted_paging_access, jitted_object_access,
                         jitted_plan_paging, jitted_execute_paging,
                         jitted_plan_object, jitted_execute_object)
-from . import batch, shardplane, sync, offload
+from . import batch, faults, shardplane, sync, offload
 
 __all__ = [
     "FREE", "LOCAL", "REMOTE", "PSF_PAGING", "PSF_RUNTIME", "PlaneConfig",
@@ -43,5 +44,5 @@ __all__ = [
     "jitted_paging_access", "jitted_object_access",
     "jitted_plan_paging", "jitted_execute_paging",
     "jitted_plan_object", "jitted_execute_object",
-    "batch", "shardplane", "sync", "offload",
+    "batch", "faults", "shardplane", "sync", "offload",
 ]

@@ -40,10 +40,12 @@ INF32 = jnp.iinfo(jnp.int32).max
 # --------------------------------------------------------------------------
 
 def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  *, mode: str | None = None):
+                  *, mode: str | None = None, shard=None,
+                  degraded: bool = False):
     """Page-granular plane: every miss pages in (with readahead); no CAT,
     no PSF consultation, no object moves.  Egress is the shared page-out."""
-    return batch_lib.paging_access(cfg, s, obj_ids, mode=mode)
+    return batch_lib.paging_access(cfg, s, obj_ids, mode=mode, shard=shard,
+                                   degraded=degraded)
 
 
 # --------------------------------------------------------------------------
@@ -169,11 +171,13 @@ def object_reclaim(cfg: PlaneConfig, s: st.PlaneState, target_free: int
 
 
 def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  reclaim_free_target: int = 2, *, mode: str | None = None):
+                  reclaim_free_target: int = 2, *, mode: str | None = None,
+                  shard=None, degraded: bool = False):
     """Object-granular plane (AIFM analogue): every miss object-fetches;
     after the batch, reclaim via the object-level LRU if frames are tight."""
     return batch_lib.object_access(cfg, s, obj_ids, reclaim_free_target,
-                                   mode=mode, reclaim=object_reclaim)
+                                   mode=mode, reclaim=object_reclaim,
+                                   shard=shard, degraded=degraded)
 
 
 # memoized jit entry points (one compilation per config per process — see
@@ -201,12 +205,13 @@ def jitted_object_access(cfg: PlaneConfig, mode: str | None = None):
 # batch N+1 is enqueued while batch N's execute runs; see serving.engine)
 
 @functools.lru_cache(maxsize=None)
-def _jitted_plan_paging(cfg: PlaneConfig):
-    return jax.jit(partial(batch_lib.plan_access, cfg, split_by_psf=False))
+def _jitted_plan_paging(cfg: PlaneConfig, degraded: bool):
+    return jax.jit(partial(batch_lib.plan_access, cfg, split_by_psf=False,
+                           degraded=degraded))
 
 
-def jitted_plan_paging(cfg: PlaneConfig):
-    return _jitted_plan_paging(cfg)
+def jitted_plan_paging(cfg: PlaneConfig, degraded: bool = False):
+    return _jitted_plan_paging(cfg, degraded)
 
 
 @functools.lru_cache(maxsize=None)
@@ -219,12 +224,13 @@ def jitted_execute_paging(cfg: PlaneConfig, mode: str | None = None):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_plan_object(cfg: PlaneConfig):
-    return jax.jit(partial(batch_lib.plan_access, cfg, all_runtime=True))
+def _jitted_plan_object(cfg: PlaneConfig, degraded: bool):
+    return jax.jit(partial(batch_lib.plan_access, cfg, all_runtime=True,
+                           degraded=degraded))
 
 
-def jitted_plan_object(cfg: PlaneConfig):
-    return _jitted_plan_object(cfg)
+def jitted_plan_object(cfg: PlaneConfig, degraded: bool = False):
+    return _jitted_plan_object(cfg, degraded)
 
 
 @functools.lru_cache(maxsize=None)

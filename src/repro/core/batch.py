@@ -130,6 +130,12 @@ class AccessPlan(NamedTuple):
     pg_fetch: jnp.ndarray   # [R+Q] scheduled page-ins, demand++prefetch (-1)
     pg_victim: jnp.ndarray  # [R+Q] destination frame per scheduled fetch
     pg_is_pf: jnp.ndarray   # [R+Q] bool: entry belongs to the prefetch section
+    # Fault-model section (repro.core.faults).  With no (or a null)
+    # schedule: served == (obj_ids >= 0), n_miss == n_pages + n_objs and
+    # n_failed == 0 — every consumer below reduces to the fault-free math.
+    served: jnp.ndarray     # [R] bool: request's row is ground truth this tick
+    n_miss: jnp.ndarray     # [] classified misses (pre-fault; stats basis)
+    n_failed: jnp.ndarray   # [] planned fetches masked off by the fault model
 
 
 def _prefetch_candidates(cfg: PlaneConfig, s: st.PlaneState,
@@ -205,15 +211,26 @@ def _plan_victims(cfg: PlaneConfig, s: st.PlaneState, req_v: jnp.ndarray,
 
 
 def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                *, split_by_psf: bool = True, all_runtime: bool = False
-                ) -> AccessPlan:
+                *, split_by_psf: bool = True, all_runtime: bool = False,
+                degraded: bool = False, shard=None) -> AccessPlan:
     """Classify the batch and build the two ingress plans (plus the paging
     plan's prefetch section and victim assignment).
 
     ``split_by_psf=False`` sends every miss down the paging plan (Fastswap
     baseline; its prefetch section skips the PSF mask — no PSF
     consultation is the point); ``all_runtime=True`` sends every miss down
-    the runtime plan (AIFM baseline; no paging section at all)."""
+    the runtime plan (AIFM baseline; no paging section at all).
+
+    When ``cfg.faults`` is an active schedule, each planned remote fetch
+    is additionally masked by ``faults.fetch_fail(step+1, vpage, shard)``
+    — a faulted fetch becomes a ``-1`` no-op plan entry (the PR-4 padding
+    convention), the requests that depended on it come back with
+    ``served=False``, and ``n_failed`` counts the masked fetches.  Because
+    the mask is applied at *plan* time, a faulted fetch never moves a
+    byte: no victim is paged out for it and no frame is partially
+    written.  ``degraded=True`` (the engine's circuit-breaker mode)
+    suppresses every remote fetch instead — the plane serves local hits
+    only, without charging ``fetch_failures``."""
     R = obj_ids.shape[0]
     Q = cfg.prefetch_budget
     # A negative id is a padded no-op request (the sharded exchange and any
@@ -259,13 +276,55 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     if all_runtime:
         pf_plan = jnp.full((Q,), -1, jnp.int32)
     else:
+        # candidates come from the *unmasked* compacted demand plan (the
+        # stride vote reads its deltas); fault masking happens below
         pf_plan = _prefetch_candidates(cfg, s, page_plan, n_pages,
                                        use_psf=split_by_psf)
+    # classified misses, before any fault masking: the stats basis (a
+    # faulted request still missed — it just isn't served this tick)
+    n_miss = n_pages + n_objs
+    served = valid
+    n_failed = jnp.zeros((), jnp.int32)
+    fc = cfg.faults
+    if degraded:
+        # circuit-breaker mode: attempt no remote fetch at all (demand,
+        # object or speculative) — local hits are the whole service
+        page_plan = jnp.full((R,), -1, jnp.int32)
+        n_pages = jnp.zeros((), jnp.int32)
+        obj_plan = jnp.full((R,), -1, jnp.int32)
+        n_objs = jnp.zeros((), jnp.int32)
+        pf_plan = jnp.full((Q,), -1, jnp.int32)
+        served = valid & local
+    elif fc is not None and fc.active:
+        tick = s.step + 1                    # the step this batch executes at
+        shard_i = 0 if shard is None else shard
+        # demand paging plan: faulted entries hole out to -1 (the
+        # executors' `fetch >= 0` masks drop holes without re-compaction)
+        failp = (page_plan >= 0) & fc.fetch_fail(tick, page_plan, shard_i)
+        n_failed_p = jnp.sum(failp.astype(jnp.int32))
+        page_plan = jnp.where(failp, -1, page_plan)
+        n_pages = n_pages - n_failed_p
+        # speculative fetches fault too, but silently (not a failure: no
+        # request depended on them)
+        failq = (pf_plan >= 0) & fc.fetch_fail(tick, pf_plan, shard_i)
+        pf_plan = jnp.where(failq, -1, pf_plan)
+        # runtime plan: mask, then RE-compact — _exec_runtime assigns
+        # append slots positionally (`t < n_move`), so holes are not allowed
+        v_obj = s.obj_loc[jnp.maximum(obj_plan, 0)] // cfg.page_objs
+        failo = (obj_plan >= 0) & fc.fetch_fail(tick, v_obj, shard_i)
+        n_failed_o = jnp.sum(failo.astype(jnp.int32))
+        keep = (obj_plan >= 0) & ~failo
+        obj_plan, n_objs = _compact(jnp.where(keep, obj_plan, -1), keep)
+        # a request is served unless its (remote) page's fetch faulted;
+        # capacity-capped and victim-starved requests still serve from the
+        # written-back slab copy (memory pressure, not a fault)
+        served = valid & (local | ~fc.fetch_fail(tick, v, shard_i))
+        n_failed = n_failed_p + n_failed_o
     fetch = jnp.concatenate([page_plan, pf_plan])
     is_pf = jnp.concatenate([jnp.zeros((R,), bool), jnp.ones((Q,), bool)])
     fetch, victim = _plan_victims(cfg, s, v, fetch, is_pf)
     return AccessPlan(v, page_plan, n_pages, obj_plan, n_objs,
-                      fetch, victim, is_pf)
+                      fetch, victim, is_pf, served, n_miss, n_failed)
 
 
 # --------------------------------------------------------------------------
@@ -575,55 +634,73 @@ def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     scalar = _resolve(cfg, mode)
     nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))   # padded ids don't count
     s = s._replace(step=s.step + 1)
-    misses = plan.n_pages + plan.n_objs
-    s = s._replace(stats=st.bump(s.stats, hits=nv - misses, misses=misses))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
+                                 misses=plan.n_miss,
+                                 fetch_failures=plan.n_failed))
     # pre-scope barrier analogue: refresh the recency of every target page
     # so mid-batch eviction prefers non-target pages (soft pin; the hard
-    # deref-count pins stay host-side, see sync.py)
-    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    # deref-count pins stay host-side, see sync.py).  Unserved (faulted)
+    # requests touched nothing — they profile as if padded.
+    pids = jnp.where(plan.served, obj_ids, -1)
+    s = s._replace(clock=s.clock.at[
+        jnp.where(plan.served, plan.vpage, cfg.num_vpages)].set(s.step))
     s = _account_prefetch_hits(cfg, s, plan)
     s = _exec_paging(cfg, s, plan, scalar=scalar)
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
-    s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
+    s = _profile(cfg, s, pids, with_cat=True, with_obj_last=True,
                  scalar=scalar)
-    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    rows = _gather_final(cfg, s, pids, scalar=scalar)
     return s, rows
 
 
 def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
-           mode: str | None = None):
+           mode: str | None = None, shard=None, degraded: bool = False):
     """Batched hybrid access: plan, execute both ingress paths, profile,
     gather.  Returns ``(state, rows[R, D])``."""
-    return execute_access(cfg, s, obj_ids, plan_access(cfg, s, obj_ids),
-                          mode=mode)
+    return execute_access(
+        cfg, s, obj_ids,
+        plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded),
+        mode=mode)
 
 
 def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-           rows: jnp.ndarray, *, mode: str | None = None) -> st.PlaneState:
+           rows: jnp.ndarray, *, mode: str | None = None, shard=None,
+           degraded: bool = False) -> st.PlaneState:
     """Batched write-through-local: fault in, overwrite rows (last write
-    wins for duplicate ids), mark dirty."""
+    wins for duplicate ids), mark dirty.  An unserved (fault-masked)
+    request writes nothing — neither tier mutates, so a retry later sees
+    the pre-fault value (no partial writes)."""
     scalar = _resolve(cfg, mode)
     P, V, F = cfg.page_objs, cfg.num_vpages, cfg.num_frames
     R = obj_ids.shape[0]
     rows = rows.astype(cfg.dtype)
+    # plan against pre-step state (plan_access never reads s.step itself,
+    # so this matches the access path, where the serving engine plans one
+    # device call ahead of the step increment — keeps the fault-model tick
+    # stream identical across access and update)
+    plan = plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded)
     s = s._replace(step=s.step + 1)
-    plan = plan_access(cfg, s, obj_ids)
     valid = obj_ids >= 0
     nv = jnp.sum(valid.astype(jnp.int32))
-    misses = plan.n_pages + plan.n_objs
-    s = s._replace(stats=st.bump(s.stats, hits=nv - misses, misses=misses))
-    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
+                                 misses=plan.n_miss,
+                                 fetch_failures=plan.n_failed))
+    served = plan.served
+    pids = jnp.where(served, obj_ids, -1)
+    s = s._replace(clock=s.clock.at[
+        jnp.where(served, plan.vpage, V)].set(s.step))
     s = _account_prefetch_hits(cfg, s, plan)
     s = _exec_paging(cfg, s, plan, scalar=scalar)
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
-    s = _profile(cfg, s, obj_ids, with_cat=True, with_obj_last=True,
+    s = _profile(cfg, s, pids, with_cat=True, with_obj_last=True,
                  scalar=scalar)
 
     va = s.obj_loc[jnp.maximum(obj_ids, 0)]
     v, slot = va // P, va % P
     local = s.backing[v] == LOCAL
-    # padded (negative-id) requests write nothing: sentinel indices drop
-    vw = jnp.where(valid, v, V)
+    # padded (negative-id) and unserved (faulted) requests write nothing:
+    # sentinel indices drop, so a failed write never mutates either tier
+    vw = jnp.where(served, v, V)
     if scalar:
         def body(i, s):
             def to_frames(s):
@@ -635,14 +712,14 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
             def to_slab(s):
                 return s._replace(slab=s.slab.at[vw[i], slot[i]].set(rows[i]))
 
-            return lax.cond(valid[i] & local[i], to_frames, to_slab, s)
+            return lax.cond(served[i] & local[i], to_frames, to_slab, s)
 
         return lax.fori_loop(0, R, body, s)
 
     # last-wins dedup for duplicate ids, then one scatter per tier
     i = jnp.arange(R, dtype=jnp.int32)
     same = (obj_ids[None, :] == obj_ids[:, None])
-    last = (jnp.max(jnp.where(same, i[None, :], -1), axis=1) == i) & valid
+    last = (jnp.max(jnp.where(same, i[None, :], -1), axis=1) == i) & served
     fidx = jnp.where(last & local, jnp.maximum(s.frame_of[v], 0) * P + slot,
                      F * P)
     sidx = jnp.where(last & ~local, v * P + slot, V * P)
@@ -651,7 +728,7 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
         frames=s.frames.reshape(F * P, D).at[fidx].set(rows).reshape(F, P, D),
         slab=s.slab.reshape(V * P, D).at[sidx].set(rows).reshape(
             cfg.num_vpages, P, D),
-        dirty=s.dirty.at[jnp.where(valid & local, v, V)].set(True),
+        dirty=s.dirty.at[jnp.where(served & local, v, V)].set(True),
     )
 
 
@@ -719,20 +796,25 @@ def execute_paging_access(cfg: PlaneConfig, s: st.PlaneState,
     scalar = _resolve(cfg, mode)
     nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))
     s = s._replace(step=s.step + 1)
-    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_pages,
-                                 misses=plan.n_pages))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
+                                 misses=plan.n_miss,
+                                 fetch_failures=plan.n_failed))
+    pids = jnp.where(plan.served, obj_ids, -1)
     # page-level recency only (no card profiling — that's the point)
-    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = s._replace(clock=s.clock.at[
+        jnp.where(plan.served, plan.vpage, cfg.num_vpages)].set(s.step))
     s = _account_prefetch_hits(cfg, s, plan)
     s = _exec_paging(cfg, s, plan, scalar=scalar)
-    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    rows = _gather_final(cfg, s, pids, scalar=scalar)
     return s, rows
 
 
 def paging_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
-                  *, mode: str | None = None):
+                  *, mode: str | None = None, shard=None,
+                  degraded: bool = False):
     """Fastswap-analogue plane on the batch engine."""
-    plan = plan_access(cfg, s, obj_ids, split_by_psf=False)
+    plan = plan_access(cfg, s, obj_ids, split_by_psf=False, shard=shard,
+                       degraded=degraded)
     return execute_paging_access(cfg, s, obj_ids, plan, mode=mode)
 
 
@@ -747,14 +829,17 @@ def execute_object_access(cfg: PlaneConfig, s: st.PlaneState,
     scalar = _resolve(cfg, mode)
     nv = jnp.sum((obj_ids >= 0).astype(jnp.int32))
     s = s._replace(step=s.step + 1)
-    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_objs,
-                                 misses=plan.n_objs))
-    s = s._replace(clock=s.clock.at[plan.vpage].set(s.step))
+    s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
+                                 misses=plan.n_miss,
+                                 fetch_failures=plan.n_failed))
+    pids = jnp.where(plan.served, obj_ids, -1)
+    s = s._replace(clock=s.clock.at[
+        jnp.where(plan.served, plan.vpage, cfg.num_vpages)].set(s.step))
     s = _exec_runtime(cfg, s, plan.obj_plan, plan.n_objs, scalar=scalar)
     # object-level hotness tracking (the expensive always-on metadata)
-    s = _profile(cfg, s, obj_ids, with_cat=False, with_obj_last=True,
+    s = _profile(cfg, s, pids, with_cat=False, with_obj_last=True,
                  scalar=scalar)
-    rows = _gather_final(cfg, s, obj_ids, scalar=scalar)
+    rows = _gather_final(cfg, s, pids, scalar=scalar)
     if reclaim is not None:
         s = reclaim(cfg, s, reclaim_free_target)
     return s, rows
@@ -762,8 +847,9 @@ def execute_object_access(cfg: PlaneConfig, s: st.PlaneState,
 
 def object_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                   reclaim_free_target: int = 2, *, mode: str | None = None,
-                  reclaim=None):
+                  reclaim=None, shard=None, degraded: bool = False):
     """AIFM-analogue plane on the batch engine."""
-    plan = plan_access(cfg, s, obj_ids, all_runtime=True)
+    plan = plan_access(cfg, s, obj_ids, all_runtime=True, shard=shard,
+                       degraded=degraded)
     return execute_object_access(cfg, s, obj_ids, plan, reclaim_free_target,
                                  mode=mode, reclaim=reclaim)

@@ -1,0 +1,179 @@
+"""Deterministic fault model for the far tier.
+
+Real disaggregated memory misbehaves: fetches fail transiently, remote
+nodes stall, whole shards drop out for a window.  This module is the one
+place that decides *when* — a seeded, stateless, counter-based schedule
+(murmur-style integer hash of ``(seed, tick, key)``) that is
+
+  * **jit-traceable**: :meth:`Schedule.fetch_fail` runs inside the
+    compiled plan step and masks individual remote fetches, and
+  * **host-replayable**: :meth:`Schedule.fails` / :meth:`Schedule.spike`
+    evaluate the *same* bits in numpy, so the serving engine, the
+    training orchestrator's failure drills, and the tests all consume
+    one schedule type and agree exactly on which tick faults.
+
+There is no RNG state anywhere — two runs with the same seed produce
+bit-identical fault streams regardless of batch interleaving, which is
+what makes chaos soak tests and the fault benchmarks reproducible.
+
+Fault classes:
+
+  * transient fetch failures — each remote fetch (keyed by vpage, or by
+    ``seq*num_pages+page`` in the KV plane) independently fails with
+    ``fail_prob`` at a given tick, optionally only inside a
+    ``fail_window`` of ticks (the fault-window benchmarks);
+  * scheduled outages — ``(start, end, shard)`` windows during which a
+    shard's far tier is unreachable (``shard == -1`` means all shards);
+  * latency spikes — host-side extra dispatch delay of ``spike_us`` with
+    probability ``spike_prob`` per tick (the device model stays
+    functional; variance is injected where wall time is actually
+    measured);
+  * explicit ``fail_at`` ticks — the orchestrator-drill style ("step 7
+    dies"), kept for crash/recovery tests.
+
+``Schedule`` is a frozen, hashable dataclass so it can sit inside
+``PlaneConfig``/``KVPlaneConfig`` and key the memoized jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# distinct multipliers decorrelate the seed/tick/key streams before the
+# finalizer; _SHARD_SALT decorrelates per-shard fault streams so a 2-shard
+# run does not fault mirrored vpages in lockstep
+_SEED_MUL = 0x9E3779B9
+_TICK_MUL = 0x85EBCA6B
+_KEY_MUL = 0xC2B2AE35
+_SHARD_SALT = 0x01000193
+_SPIKE_KEY = 0x5A1AD  # reserved key: the host-side latency-spike stream
+
+
+def _mix(h, xp):
+    """32-bit finalizer (murmur3-style avalanche) on uint32 arrays."""
+    h = h ^ (h >> 16)
+    h = h * xp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * xp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _u01(seed, tick, key, xp):
+    """Uniform [0,1) from (seed, tick, key); identical bits on host/device."""
+    if xp is np:  # uint32 wraparound is the point; don't warn about it
+        with np.errstate(over="ignore"):
+            return _u01_raw(seed, tick, key, xp)
+    return _u01_raw(seed, tick, key, xp)
+
+
+def _u01_raw(seed, tick, key, xp):
+    h = (xp.asarray(seed).astype(xp.uint32) * xp.uint32(_SEED_MUL)
+         ^ xp.asarray(tick).astype(xp.uint32) * xp.uint32(_TICK_MUL)
+         ^ xp.asarray(key).astype(xp.uint32) * xp.uint32(_KEY_MUL))
+    return _mix(h, xp).astype(xp.float32) * xp.float32(2.0 ** -32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A deterministic fault schedule (frozen ⇒ hashable ⇒ jit-cache key).
+
+    The default instance is the null schedule: ``Schedule().active`` is
+    False and every fault predicate is constant-false, so wiring it in is
+    bit-identical to no fault model at all.
+    """
+    seed: int = 0
+    fail_prob: float = 0.0          # per-fetch transient failure probability
+    fail_window: tuple = ()         # (start, end): fail_prob only inside;
+                                    # () = fail_prob applies at every tick
+    outages: tuple = ()             # ((start_tick, end_tick, shard), ...)
+    fail_at: tuple = ()             # ticks where the whole tier fails once
+    spike_prob: float = 0.0         # per-tick latency-spike probability
+    spike_us: float = 0.0           # extra dispatch latency when spiking
+
+    def __post_init__(self):
+        # normalize to nested tuples so list-built schedules stay hashable
+        object.__setattr__(self, "outages",
+                           tuple(tuple(int(x) for x in w)
+                                 for w in self.outages))
+        object.__setattr__(self, "fail_at",
+                           tuple(int(t) for t in self.fail_at))
+        object.__setattr__(self, "fail_window",
+                           tuple(int(t) for t in self.fail_window))
+        assert len(self.fail_window) in (0, 2), \
+            "fail_window is a (start_tick, end_tick) pair"
+        assert 0.0 <= self.fail_prob <= 1.0
+        assert 0.0 <= self.spike_prob <= 1.0
+        assert all(len(w) == 3 for w in self.outages), \
+            "outages are (start_tick, end_tick, shard) triples"
+
+    @property
+    def active(self) -> bool:
+        """True if any device-side fault can ever fire (spikes are
+        host-side only and do not perturb the compiled plan)."""
+        return bool(self.fail_prob > 0.0 or self.outages or self.fail_at)
+
+    # ---------------------------------------------------------- device ----
+    def in_outage(self, tick, shard):
+        """Traced bool []: is ``shard`` inside an outage window at ``tick``?"""
+        tick = jnp.asarray(tick, jnp.int32)
+        shard = jnp.asarray(shard, jnp.int32)
+        hit = jnp.zeros((), bool)
+        for start, end, sh in self.outages:  # static unroll (few windows)
+            cover = (tick >= start) & (tick < end)
+            if sh >= 0:
+                cover = cover & (shard == sh)
+            hit = hit | cover
+        return hit
+
+    def fetch_fail(self, tick, keys, shard=0):
+        """Traced bool mask, shape of ``keys``: the remote fetch of each
+        key fails at ``tick``.  Callers apply it only to entries that
+        actually go remote (local hits never fault)."""
+        keys = jnp.asarray(keys)
+        fail = jnp.zeros(keys.shape, bool)
+        if self.fail_prob > 0.0:
+            salted = (keys.astype(jnp.uint32)
+                      + jnp.asarray(shard).astype(jnp.uint32)
+                      * jnp.uint32(_SHARD_SALT))
+            fail = _u01(self.seed, tick, salted, jnp) < self.fail_prob
+            if self.fail_window:
+                w0, w1 = self.fail_window
+                t = jnp.asarray(tick, jnp.int32)
+                fail = fail & (t >= w0) & (t < w1)
+        if self.outages:
+            fail = fail | self.in_outage(tick, shard)
+        if self.fail_at:
+            at = jnp.asarray(self.fail_at, jnp.int32)
+            fail = fail | jnp.any(at == jnp.asarray(tick, jnp.int32))
+        return fail
+
+    # ------------------------------------------------------------ host ----
+    def fails(self, tick: int, key: int = 0, shard: int = 0) -> bool:
+        """Host mirror of :meth:`fetch_fail` for a single (tick, key)."""
+        if int(tick) in self.fail_at:
+            return True
+        for start, end, sh in self.outages:
+            if start <= int(tick) < end and (sh < 0 or sh == int(shard)):
+                return True
+        if self.fail_prob > 0.0:
+            if self.fail_window and not (
+                    self.fail_window[0] <= int(tick) < self.fail_window[1]):
+                return False
+            salted = (np.uint32(np.int64(key) & 0xFFFFFFFF)
+                      + np.uint32(shard) * np.uint32(_SHARD_SALT))
+            return bool(_u01(self.seed, tick, salted, np) < self.fail_prob)
+        return False
+
+    def spike(self, tick: int) -> float:
+        """Extra dispatch latency (us) injected at this tick; 0 if none."""
+        if self.spike_prob <= 0.0:
+            return 0.0
+        if float(_u01(self.seed, tick, _SPIKE_KEY, np)) < self.spike_prob:
+            return float(self.spike_us)
+        return 0.0
+
+
+NULL = Schedule()

@@ -70,6 +70,10 @@ class KVPlaneConfig:
     # with pages the top-page trajectory is trending toward
     prefetch: str = "none"      # "none" | "sequential" | "majority"
     prefetch_budget: int = 0    # lookahead pages planned per sequence
+    # fault model (repro.core.faults.Schedule; None == null schedule):
+    # faulted fetches drop out of the plan before victim assignment, so
+    # attention proceeds on whatever is resident (graceful degradation)
+    faults: object = None
 
     @property
     def dense(self) -> bool:
@@ -284,6 +288,17 @@ def plan_fetch(cfg: KVPlaneConfig, s: KVPlaneState, tops: jnp.ndarray
     same = (gp[None, :] == gp[:, None]) & ok[None, :]
     first = jnp.min(jnp.where(same, i[None, :], N), axis=1) == i
     page = jnp.where(ok & first, page, -1)
+
+    # fault model (repro.core.faults): a faulted remote fetch drops out of
+    # the plan HERE — before victim assignment — so it never claims a frame
+    # or evicts anything; attention simply proceeds on what is resident
+    # (the sparse path's score masking already tolerates missing pages)
+    fc = cfg.faults
+    if fc is not None and fc.active:
+        okf = page >= 0
+        fail = okf & fc.fetch_fail(s.step + 1,
+                                   seq * NP + jnp.maximum(page, 0))
+        page = jnp.where(fail, -1, page)
 
     # victims: one masked top-k over the shared pool; every wanted-resident
     # frame is pinned (the soft-pin analogue made hard by the mask).  The

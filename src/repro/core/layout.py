@@ -73,6 +73,9 @@ class PlaneConfig:
     access_mode: str = "batch"       # "batch" (vectorized) | "reference" (scalar oracle)
     kernel_impl: str = dataclasses.field(default_factory=_default_kernel_impl)
     # "auto" = Pallas on TPU / jnp ref elsewhere; "pallas" | "interpret" | "ref"
+    # Fault model (repro.core.faults.Schedule; frozen => still hashable).
+    # None and the null Schedule() are both bit-identical to no fault model.
+    faults: Any = None
 
     def __post_init__(self):
         assert self.prefetch in ("sequential", "majority"), self.prefetch

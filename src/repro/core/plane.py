@@ -89,12 +89,12 @@ def jitted_update(cfg: PlaneConfig, mode: str | None = None):
 # batch N's execute runs (double-buffered dispatch, see serving.engine)
 
 @functools.lru_cache(maxsize=None)
-def _jitted_plan_access(cfg: PlaneConfig):
-    return jax.jit(partial(batch_lib.plan_access, cfg))
+def _jitted_plan_access(cfg: PlaneConfig, degraded: bool):
+    return jax.jit(partial(batch_lib.plan_access, cfg, degraded=degraded))
 
 
-def jitted_plan_access(cfg: PlaneConfig):
-    return _jitted_plan_access(cfg)
+def jitted_plan_access(cfg: PlaneConfig, degraded: bool = False):
+    return _jitted_plan_access(cfg, degraded)
 
 
 @functools.lru_cache(maxsize=None)

@@ -166,23 +166,37 @@ def _pack_round(cfg: ShardedPlaneConfig, ids, todo):
     return send, cnt, todo & ~served, n_spill
 
 
-def _serve_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, me, *, mode):
+def _serve_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, me, *, mode,
+                 degraded: bool = False):
     """Serve one round's received ids against this shard's own plane.
     ``recv/recv_cnt [S, B]`` destination-major buffers; ``me`` the shard
-    index.  Returns ``(state, rows [S, B, D])`` (source-major again after
-    the reshape — row block ``j`` answers source shard ``j``)."""
+    index.  Returns ``(state, rows [S, B, D], served [S, B])`` (source-
+    major again after the reshape — row block ``j`` answers source shard
+    ``j``).  ``me`` keys the fault model's per-shard stream, so a
+    scheduled outage of shard k fails exactly the fetches k itself would
+    have performed."""
     S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
     ok = recv >= 0
     lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
     if cfg.plane == "hybrid":
-        s, rows = batch_lib.access(cfg.shard, s, lids, mode=mode)
+        plan = batch_lib.plan_access(cfg.shard, s, lids, shard=me,
+                                     degraded=degraded)
+        s, rows = batch_lib.execute_access(cfg.shard, s, lids, plan,
+                                           mode=mode)
     elif cfg.plane == "paging":
-        s, rows = batch_lib.paging_access(cfg.shard, s, lids, mode=mode)
+        plan = batch_lib.plan_access(cfg.shard, s, lids, split_by_psf=False,
+                                     shard=me, degraded=degraded)
+        s, rows = batch_lib.execute_paging_access(cfg.shard, s, lids, plan,
+                                                  mode=mode)
     else:
-        s, rows = baselines.object_access(cfg.shard, s, lids, mode=mode)
+        plan = batch_lib.plan_access(cfg.shard, s, lids, all_runtime=True,
+                                     shard=me, degraded=degraded)
+        s, rows = batch_lib.execute_object_access(
+            cfg.shard, s, lids, plan, mode=mode,
+            reclaim=baselines.object_reclaim)
     extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
     s = s._replace(stats=st.bump(s.stats, hits=extra))
-    return s, rows.reshape(S, B, D)
+    return s, rows.reshape(S, B, D), plan.served.reshape(S, B)
 
 
 def _collect_round(cfg: ShardedPlaneConfig, out, ids, send, got):
@@ -197,6 +211,19 @@ def _collect_round(cfg: ShardedPlaneConfig, out, ids, send, got):
     j = jnp.argmax(match, axis=1)
     hit = jnp.any(match, axis=1)
     return jnp.where(hit[:, None], rows[j], out)
+
+
+def _collect_served(cfg: ShardedPlaneConfig, out, ids, send, got):
+    """Scatter one round's returned served flags into request order (the
+    bool analogue of ``_collect_round``; duplicates of a sent id all take
+    the owner's verdict)."""
+    S, B = cfg.shards, cfg.per_shard_budget
+    flat = send.reshape(S * B)
+    sv = got.reshape(S * B)
+    match = (ids[:, None] == flat[None, :]) & (flat[None, :] >= 0)
+    j = jnp.argmax(match, axis=1)
+    hit = jnp.any(match, axis=1)
+    return jnp.where(hit, sv[j], out)
 
 
 def _pack_payload(cfg: ShardedPlaneConfig, ids, rows, send):
@@ -219,7 +246,7 @@ def _serve_update_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, payload,
     ok = recv >= 0
     lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
     s = batch_lib.update(cfg.shard, s, lids, payload.reshape(S * B, D),
-                         mode=mode)
+                         mode=mode, shard=me)
     extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
     return s._replace(stats=st.bump(s.stats, hits=extra))
 
@@ -242,28 +269,38 @@ def _bump_spills(states, spills):
 # single-device oracle: vmap over shards, collectives as transposes
 # --------------------------------------------------------------------------
 
-def access(cfg: ShardedPlaneConfig, states, ids, *, mode=None):
+def access(cfg: ShardedPlaneConfig, states, ids, *, mode=None,
+           degraded: bool = False, with_served: bool = False):
     """Sharded access on ONE device (the bit-equivalence oracle).
 
     ``states``: stacked ``[S, ...]`` plane; ``ids [S, R]`` global object
     ids per source shard (< 0 = padding).  Returns ``(states,
-    rows [S, R, D])`` in request order."""
+    rows [S, R, D])`` in request order — plus a ``served [S, R]`` bool
+    when ``with_served`` (fault-model verdicts riding the exchange back
+    to the requesters; padding is never served)."""
     S, R, D = cfg.shards, cfg.shard_batch, cfg.shard.obj_dim
     todo = ids >= 0
     out = jnp.zeros((S, R, D), cfg.shard.dtype)
+    out_sv = jnp.zeros((S, R), bool)
     spills = jnp.zeros((S,), jnp.int32)
     me = jnp.arange(S, dtype=jnp.int32)
     pack = jax.vmap(partial(_pack_round, cfg))
-    serve = jax.vmap(partial(_serve_round, cfg, mode=mode))
+    serve = jax.vmap(partial(_serve_round, cfg, mode=mode,
+                             degraded=degraded))
     collect = jax.vmap(partial(_collect_round, cfg))
+    collect_sv = jax.vmap(partial(_collect_served, cfg))
     for _ in range(cfg.rounds):
         send, cnt, todo, nsp = pack(ids, todo)
         spills = spills + nsp
         # the emulated all_to_all: [S(src), S(dst), B] -> [S(dst), S(src), B]
-        states, rows = serve(states, jnp.swapaxes(send, 0, 1),
-                             jnp.swapaxes(cnt, 0, 1), me)
+        states, rows, sv = serve(states, jnp.swapaxes(send, 0, 1),
+                                 jnp.swapaxes(cnt, 0, 1), me)
         out = collect(out, ids, send, jnp.swapaxes(rows, 0, 1))
-    return _bump_spills(states, spills), out
+        out_sv = collect_sv(out_sv, ids, send, jnp.swapaxes(sv, 0, 1))
+    states = _bump_spills(states, spills)
+    if with_served:
+        return states, out, out_sv
+    return states, out
 
 
 def update(cfg: ShardedPlaneConfig, states, ids, rows, *, mode=None):
@@ -314,21 +351,28 @@ def _a2a(x):
     return lax.all_to_all(x, "far", split_axis=0, concat_axis=0)
 
 
-def _access_body(cfg: ShardedPlaneConfig, mode, states, ids):
+def _access_body(cfg: ShardedPlaneConfig, mode, degraded, with_served,
+                 states, ids):
     s = jax.tree.map(lambda x: x[0], states)
     ids = ids[0]
     me = lax.axis_index("far").astype(jnp.int32)
     R, D = cfg.shard_batch, cfg.shard.obj_dim
     todo = ids >= 0
     out = jnp.zeros((R, D), cfg.shard.dtype)
+    out_sv = jnp.zeros((R,), bool)
     spills = jnp.zeros((), jnp.int32)
     for _ in range(cfg.rounds):
         send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
         spills = spills + nsp
-        s, rows = _serve_round(cfg, s, _a2a(send), _a2a(cnt), me, mode=mode)
+        s, rows, sv = _serve_round(cfg, s, _a2a(send), _a2a(cnt), me,
+                                   mode=mode, degraded=degraded)
         out = _collect_round(cfg, out, ids, send, _a2a(rows))
+        out_sv = _collect_served(cfg, out_sv, ids, send, _a2a(sv))
     s = _bump_spills(s, spills)
-    return jax.tree.map(lambda x: x[None], s), out[None]
+    s = jax.tree.map(lambda x: x[None], s)
+    if with_served:
+        return s, out[None], out_sv[None]
+    return s, out[None]
 
 
 def _update_body(cfg: ShardedPlaneConfig, mode, states, ids, rows):
@@ -377,23 +421,31 @@ def _state_specs(cfg: ShardedPlaneConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_access(cfg: ShardedPlaneConfig, mode, mesh):
+def _jitted_access(cfg: ShardedPlaneConfig, mode, mesh, with_served,
+                   degraded):
     if mesh is None:
-        return jax.jit(partial(access, cfg, mode=mode))
+        return jax.jit(partial(access, cfg, mode=mode, degraded=degraded,
+                               with_served=with_served))
     sp = _state_specs(cfg)
     # check_rep=False: the plane engine contains fori/while loops, which
     # shard_map's replication checker cannot rule on (the state is
     # genuinely sharded anyway)
-    fn = shard_map(partial(_access_body, cfg, mode), mesh=mesh,
-                   in_specs=(sp, P("far")), out_specs=(sp, P("far")),
+    outs = ((sp, P("far"), P("far")) if with_served else (sp, P("far")))
+    fn = shard_map(partial(_access_body, cfg, mode, degraded, with_served),
+                   mesh=mesh, in_specs=(sp, P("far")), out_specs=outs,
                    check_rep=False)
     return jax.jit(fn)
 
 
-def jitted_access(cfg: ShardedPlaneConfig, mode=None, mesh=None):
+def jitted_access(cfg: ShardedPlaneConfig, mode=None, mesh=None, *,
+                  with_served: bool = False, degraded: bool = False):
     """``(states, ids [S, R]) -> (states, rows [S, R, D])``; ``mesh=None``
-    runs the vmap oracle on one device, a ``far`` mesh runs shard_map."""
-    return _jitted_access(cfg, mode or cfg.shard.access_mode, mesh)
+    runs the vmap oracle on one device, a ``far`` mesh runs shard_map.
+    ``with_served=True`` appends the fault model's per-request ``served
+    [S, R]`` verdicts; ``degraded=True`` compiles the hits-only
+    circuit-breaker variant."""
+    return _jitted_access(cfg, mode or cfg.shard.access_mode, mesh,
+                          with_served, degraded)
 
 
 @functools.lru_cache(maxsize=None)

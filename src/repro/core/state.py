@@ -33,6 +33,9 @@ class PlaneStats(NamedTuple):
     epochs: jnp.ndarray          # advance_epoch invocations (governor runs)
     ingress_spills: jnp.ndarray  # sharded-exchange requests deferred a round
     #                              (per_shard_budget overflow, shardplane)
+    fetch_failures: jnp.ndarray  # planned fetches masked off by the fault
+    #                              model (repro.core.faults) — each left its
+    #                              request unserved this tick
 
     @classmethod
     def zeros(cls) -> "PlaneStats":

@@ -21,18 +21,38 @@ import jax
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
+from repro.core import faults
 
 
 class FailureInjector:
-    """Deterministic failure schedule for tests/drills."""
+    """Deterministic failure schedule for tests/drills.
 
-    def __init__(self, fail_at_steps=()):
-        self.fail_at = set(fail_at_steps)
+    A host-side view over the plane-wide fault model
+    (:class:`repro.core.faults.Schedule`): the legacy ``fail_at_steps``
+    list becomes the schedule's explicit ``fail_at`` ticks, and a full
+    ``schedule`` adds seeded per-step node loss (``fail_prob``) and
+    outage windows — the same streams the serving engine and the chaos
+    tests consume, so one seed describes a whole drill.  Each step fires
+    at most once (a restarted step must not re-fail forever)."""
+
+    def __init__(self, fail_at_steps=(),
+                 schedule: Optional[faults.Schedule] = None):
+        extra = tuple(int(s) for s in fail_at_steps)
+        if schedule is None:
+            schedule = faults.Schedule(fail_at=extra)
+        elif extra:
+            schedule = dataclasses.replace(
+                schedule, fail_at=tuple(schedule.fail_at) + extra)
+        self.schedule = schedule
         self.failures = 0
+        self._fired: set = set()
 
     def check(self, step: int):
-        if step in self.fail_at:
-            self.fail_at.discard(step)
+        step = int(step)
+        if step in self._fired:
+            return
+        if self.schedule.fails(step):
+            self._fired.add(step)
             self.failures += 1
             raise RuntimeError(f"injected node failure at step {step}")
 

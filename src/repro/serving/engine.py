@@ -26,6 +26,28 @@ got around to serving it — under saturation the queueing delay is real
 latency and is measured as such (the saturation knee of the paper's
 latency-throughput curves).
 
+Robust serving (chaos mode): with a :class:`repro.core.faults.Schedule`
+on ``EngineConfig.faults`` the plane's remote fetches can fail
+deterministically; each plan then carries a per-request ``served`` mask
+and the engine closes the loop host-side:
+
+* **retry** — unserved requests re-enter the next tick's batch (bounded
+  queue, per-request attempt counts, ``max_retries``);
+* **shed** — requests past ``deadline_us`` are dropped at admission and
+  counted (``shed_policy="deadline"``), never silently queued;
+* **watchdog** — ``_retire_one`` polls with a deadline instead of
+  blocking forever, so a wedged device call raises instead of hanging;
+* **circuit breaker** — an async health probe (the same ``is_ready()``
+  pattern as the epoch watermark) tracks the fetch-failure fraction; past
+  ``breaker_threshold`` the engine flips to **degraded paging-local
+  serving** (local hits only, no remote fetches, no victim writes) and
+  keeps probing the far tier on every ``breaker_probe_every``-th tick,
+  closing again with hysteresis once probes come back healthy.
+
+``run`` then reports **goodput** (requests actually served) separately
+from raw throughput (served + shed) — the split the fault-window
+benchmarks plot (benchmarks/fig_faults.py).
+
 Every plane runs on the plan-then-execute batch ingress engine
 (``repro.core.batch``); ``EngineConfig.mode="reference"`` swaps in the
 scalar oracle executor for debugging and equivalence runs.
@@ -35,7 +57,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Iterable
+from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -84,27 +106,119 @@ class EngineConfig:
     # Per-(src, dst) id budget per exchange round (0 = auto: one round,
     # budget = batch/shards, nothing ever spills).
     shard_budget: int = 0
+    # ---- robust / chaos serving ------------------------------------------
+    # Deterministic fault schedule (repro.core.faults.Schedule) injected
+    # into the plane config: remote fetches fail per the schedule, plans
+    # carry a per-request ``served`` mask, and the engine runs the robust
+    # submit/retire path below.  None = fault-free (and, with the other
+    # knobs at their defaults, the engine is bit-identical to the plain
+    # one — enforced by tests/test_faults.py).
+    faults: object = None
+    # Per-request latency SLO in microseconds (0 = no deadline).  Measured
+    # from the scheduled-arrival clock, same as the latency tracker.
+    deadline_us: float = 0.0
+    # Re-dispatch attempts for requests whose fetch faulted (0 = a faulted
+    # request is shed immediately).  Retries ride in the unused tail slots
+    # of later ticks' fixed-size batches, so they never grow the compiled
+    # shapes.
+    max_retries: int = 0
+    # "deadline": drop over-deadline requests at admission (counted in
+    # shed_requests + deadline_misses).  "none": admit regardless; late
+    # service still counts a deadline_miss at retirement.
+    shed_policy: str = "deadline"
+    # Bounded retry queue: overflow is shed (counted), never buffered
+    # unboundedly — a dead far tier must not OOM the host.
+    retry_queue_cap: int = 1024
+    # _retire_one watchdog: raise TimeoutError if an in-flight batch is
+    # still not ready after this many seconds (0 = block forever, the
+    # legacy behavior).
+    watchdog_s: float = 120.0
+    # Circuit breaker: open (degraded paging-local serving) once an async
+    # stats probe sees the windowed fetch-failure fraction reach this
+    # value (0 = breaker off).  While open, every breaker_probe_every-th
+    # tick dispatches normally to probe far-tier health; the breaker
+    # closes again once a probe window's failure fraction falls to
+    # threshold * hysteresis (recovery needs to look *better* than the
+    # trip point — no flapping on the edge).
+    breaker_threshold: float = 0.0
+    breaker_probe_every: int = 4
+    breaker_hysteresis: float = 0.5
 
 
 class LatencyTracker:
-    def __init__(self):
-        self.lat_us: list[float] = []
+    """Latency sink with **bounded memory**.
+
+    The previous tracker appended every sample to a Python list — a
+    day-long soak at 1M req/s is ~0.7 GB of floats.  This one keeps an
+    exact streaming count and mean plus a fixed-capacity uniform
+    reservoir (Vitter's algorithm R, vectorized, deterministically
+    seeded) for the percentiles: up to ``capacity`` samples the
+    percentiles are exact; beyond that they are an unbiased estimate
+    over a uniform sample of the whole stream.
+    """
+
+    def __init__(self, capacity: int = 65536, seed: int = 0x5EED):
+        self.capacity = int(capacity)
+        self._buf = np.empty((self.capacity,), np.float64)
+        self._rng = np.random.RandomState(seed)
+        self.n = 0
+        self._sum = 0.0
 
     def record(self, t_in: float, t_out: float, n: int):
-        dt = (t_out - t_in) * 1e6
-        self.lat_us.extend([dt] * n)
+        if n > 0:
+            self.record_us(np.full((int(n),), (t_out - t_in) * 1e6))
+
+    def record_us(self, lat_us):
+        """Record a vector of per-request latencies (microseconds)."""
+        lat = np.asarray(lat_us, np.float64).reshape(-1)
+        if lat.size == 0:
+            return
+        self._sum += float(lat.sum())
+        pos = self.n + np.arange(lat.size)
+        head = pos < self.capacity
+        if head.any():
+            self._buf[pos[head]] = lat[head]
+        tail = ~head
+        if tail.any():
+            # stream element j replaces a random slot with p = capacity/(j+1)
+            j = pos[tail]
+            r = np.floor(self._rng.random_sample(j.size) * (j + 1)
+                         ).astype(np.int64)
+            hit = r < self.capacity
+            self._buf[r[hit]] = lat[tail][hit]
+        self.n += int(lat.size)
+
+    @property
+    def lat_us(self) -> list:
+        """Retained samples (bounded compat view of the old raw list)."""
+        return self._buf[:min(self.n, self.capacity)].tolist()
 
     def percentile(self, p: float) -> float:
-        return float(np.percentile(self.lat_us, p)) if self.lat_us else 0.0
+        k = min(self.n, self.capacity)
+        return float(np.percentile(self._buf[:k], p)) if k else 0.0
 
     def summary(self) -> dict:
-        if not self.lat_us:
+        if self.n == 0:
             return {}
-        a = np.asarray(self.lat_us)
+        a = self._buf[:min(self.n, self.capacity)]
         return {"p50_us": float(np.percentile(a, 50)),
                 "p90_us": float(np.percentile(a, 90)),
                 "p99_us": float(np.percentile(a, 99)),
-                "mean_us": float(a.mean()), "n": len(a)}
+                "mean_us": self._sum / self.n, "n": self.n}
+
+
+class _Inflight(NamedTuple):
+    """One dispatched batch awaiting retirement."""
+    rows: object            # async device array [batch, D]
+    t_sched: float          # batch scheduled-arrival clock (legacy path)
+    n: int                  # caller's request count (first n slots)
+    served: object = None   # async [batch] bool (robust engines only)
+    ids: object = None      # np [batch] int32 slot ids (incl. retries, -1 pad)
+    t0s: object = None      # np [batch] float64 per-slot arrival clocks
+    att: object = None      # np [batch] int32 per-slot attempt counts
+
+
+_EMPTY_IDS = np.empty((0,), np.int32)
 
 
 class Engine:
@@ -118,16 +232,24 @@ class Engine:
     def __init__(self, cfg: EngineConfig, pcfg: PlaneConfig,
                  initial: jnp.ndarray, mesh=None):
         self.cfg = cfg
+        if cfg.faults is not None:
+            # the schedule rides in the (hashable, static) plane config so
+            # every jitted entry point sees the same deterministic streams
+            pcfg = dataclasses.replace(pcfg, faults=cfg.faults)
         self.pcfg = pcfg
         self.scfg = None
         sharded = cfg.shards > 1
         epoch_on = (cfg.plane == "hybrid"
                     and (cfg.epoch_every > 0 or cfg.epoch_watermark_bytes > 0))
+        self._robust = (cfg.faults is not None or cfg.deadline_us > 0
+                        or cfg.max_retries > 0 or cfg.breaker_threshold > 0)
+        breaker_on = self._robust and cfg.breaker_threshold > 0
         # memoized jit entry points: engines sharing a PlaneConfig share one
         # compiled executable per op (continuous batching spins up several)
         self._plan = self._exec = self._access = None
         self._evac = self._epoch = self._traffic = None
         self._evac_slice = self._evac_slice_clear = None
+        self._plan_deg = self._access_deg = self._health = None
         if sharded:
             assert cfg.batch % cfg.shards == 0, (
                 f"batch={cfg.batch} must split evenly over "
@@ -142,8 +264,14 @@ class Engine:
                     lambda _: NamedSharding(mesh, PartitionSpec("far")),
                     self.state))
             # fused access: the exchange already interleaves plan+execute
-            # per round, so there is no host-visible plan/execute split
-            self._access = shardplane.jitted_access(scfg, cfg.mode, mesh)
+            # per round, so there is no host-visible plan/execute split.
+            # Robust engines take the served-channel variant (the verdicts
+            # ride the exchange back with the rows).
+            self._access = shardplane.jitted_access(
+                scfg, cfg.mode, mesh, with_served=self._robust)
+            if breaker_on:
+                self._access_deg = shardplane.jitted_access(
+                    scfg, cfg.mode, mesh, with_served=True, degraded=True)
             if cfg.plane == "hybrid":
                 self._evac = shardplane.jitted_evacuate(scfg, mesh=mesh)
                 if cfg.evac_budget > 0:
@@ -160,6 +288,9 @@ class Engine:
             self.state = state_lib.create(pcfg, initial)
             self._plan = plane_lib.jitted_plan_access(pcfg)
             self._exec = plane_lib.jitted_execute_access(pcfg, cfg.mode)
+            if breaker_on:
+                self._plan_deg = plane_lib.jitted_plan_access(
+                    pcfg, degraded=True)
             self._evac = plane_lib.jitted_evacuate(pcfg)
             if cfg.evac_budget > 0:
                 # background slices: each is plan_evacuate+execute_evacuate
@@ -178,11 +309,17 @@ class Engine:
             self.state = state_lib.create(pcfg, initial)
             self._plan = baselines.jitted_plan_paging(pcfg)
             self._exec = baselines.jitted_execute_paging(pcfg, cfg.mode)
+            if breaker_on:
+                self._plan_deg = baselines.jitted_plan_paging(
+                    pcfg, degraded=True)
             tcfg = pcfg
         elif cfg.plane == "object":
             self.state = state_lib.create(pcfg, initial)
             self._plan = baselines.jitted_plan_object(pcfg)
             self._exec = baselines.jitted_execute_object(pcfg, cfg.mode)
+            if breaker_on:
+                self._plan_deg = baselines.jitted_plan_object(
+                    pcfg, degraded=True)
             tcfg = pcfg
         else:
             raise ValueError(cfg.plane)
@@ -200,15 +337,35 @@ class Engine:
                 * pb
                 + (s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
                 * rb))
+        if breaker_on:
+            # health probe: cumulative (failed, attempted) remote fetches.
+            # Attempts = successful ingress + failures, so degraded ticks
+            # (which fetch nothing) contribute ~nothing to either side and
+            # a window's fraction measures exactly its *probe* tick's
+            # health — the breaker can close off one good probe.
+            self._health = jax.jit(lambda s: jnp.stack([
+                jnp.sum(s.stats.fetch_failures).astype(jnp.float32),
+                jnp.sum(s.stats.page_ins + s.stats.obj_ins
+                        + s.stats.fetch_failures).astype(jnp.float32)]))
         self._probe = None              # in-flight traffic watermark read
+        self._hprobe = None             # in-flight health probe read
+        self._hlast = np.zeros((2,), np.float64)
+        self.breaker_open = False
+        self._retryq: deque = deque()   # (obj_id, t0, attempt)
+        self.counters = {"served": 0, "fetch_retries": 0, "shed_requests": 0,
+                         "deadline_misses": 0, "degraded_ticks": 0,
+                         "breaker_trips": 0}
         self.latency = LatencyTracker()
         self.ticks = 0
-        self._inflight: deque = deque()     # (t_sched, rows, n) oldest-first
+        self._inflight: deque[_Inflight] = deque()      # oldest-first
         # warm the compiled paths so the first request doesn't pay jit time
         if sharded:
             warm = jnp.zeros((cfg.shards, cfg.batch // cfg.shards),
                              jnp.int32)
-            self.state, _ = self._access(self.state, warm)
+            if self._robust:
+                self.state, _, _ = self._access(self.state, warm)
+            else:
+                self.state, _ = self._access(self.state, warm)
         else:
             warm = jnp.zeros((cfg.batch,), jnp.int32)
             self.state, _ = self._exec(self.state, warm,
@@ -223,6 +380,16 @@ class Engine:
             jax.block_until_ready(self._epoch(self.state))
         if self._traffic is not None:
             jax.block_until_ready(self._traffic(self.state))
+        # warm the degraded/probe entries too — compiling them lazily would
+        # land the jit cost inside the fault window and pollute its p99.
+        # Results are discarded: warmup state stays identical to a plain
+        # engine's (the fault-free equivalence tests depend on it).
+        if self._plan_deg is not None:
+            jax.block_until_ready(self._plan_deg(self.state, warm))
+        if self._access_deg is not None:
+            jax.block_until_ready(self._access_deg(self.state, warm))
+        if self._health is not None:
+            jax.block_until_ready(self._health(self.state))
         self.state = self.state._replace(
             stats=jax.tree.map(jnp.zeros_like, self.state.stats),
             epoch_page_ins=jnp.zeros_like(self.state.epoch_page_ins),
@@ -241,27 +408,114 @@ class Engine:
         # opportunistic retirement: anything already finished on device is
         # recorded now, so recorded latency tracks actual completion rather
         # than when back-pressure forces a block
-        while self._inflight and self._inflight[0][1].is_ready():
+        while self._inflight and self._inflight[0].rows.is_ready():
             self._retire_one()
+        if self._robust:
+            rows = self._submit_robust(obj_ids, t_sched)
+        else:
+            rows = self._dispatch(obj_ids, t_sched)
+        self.ticks += 1
+        self._maintenance()
+        limit = 0 if self.cfg.dispatch == "sync" else self.cfg.pipeline_depth
+        while len(self._inflight) > limit:
+            self._retire_one()
+        return rows
+
+    def _dispatch(self, obj_ids, t_sched):
+        """Fault-free dispatch (the original engine path)."""
+        cfg = self.cfg
         ids = jnp.asarray(obj_ids, jnp.int32)
         n = len(obj_ids)
+        # short batches pad with the plane's negative-id no-ops: fixed
+        # shapes keep one compiled program per engine (sharded and
+        # unsharded alike)
+        if n < cfg.batch:
+            ids = jnp.concatenate(
+                [ids, jnp.full((cfg.batch - n,), -1, jnp.int32)])
         if self._access is not None:
-            # sharded far tier: the batch splits evenly across source
-            # shards; short batches pad with the engine's negative-id
-            # no-ops (fixed shapes keep one compiled program)
-            S, R = self.cfg.shards, self.cfg.batch // self.cfg.shards
-            if n < self.cfg.batch:
-                ids = jnp.concatenate(
-                    [ids, jnp.full((self.cfg.batch - n,), -1, jnp.int32)])
+            # sharded far tier: the batch splits evenly across source shards
+            S, R = cfg.shards, cfg.batch // cfg.shards
             self.state, out = self._access(self.state, ids.reshape(S, R))
-            rows = out.reshape(self.cfg.batch, -1)[:n]
+            rows_full = out.reshape(cfg.batch, -1)
         else:
             # two async device calls: the plan dispatch is what a sharded
             # deployment runs host-side / on a prefetch stream
             plan = self._plan(self.state, ids)
-            self.state, rows = self._exec(self.state, ids, plan)
-        self._inflight.append((t_sched, rows, n))
-        self.ticks += 1
+            self.state, rows_full = self._exec(self.state, ids, plan)
+        self._inflight.append(_Inflight(rows_full, t_sched, n))
+        return rows_full[:n] if n < cfg.batch else rows_full
+
+    def _submit_robust(self, obj_ids, t_sched):
+        """Chaos-mode dispatch: deadline shed at admission, retry slots in
+        the batch tail, per-slot served verdicts, circuit-breaker routing."""
+        cfg = self.cfg
+        ids_np = np.asarray(obj_ids, np.int32).reshape(-1)
+        n = ids_np.size
+        assert n <= cfg.batch, f"batch of {n} > configured batch={cfg.batch}"
+        now = time.time()
+        shed = (cfg.deadline_us > 0 and cfg.shed_policy == "deadline"
+                and n > 0 and (now - t_sched) * 1e6 > cfg.deadline_us)
+        if shed:
+            # the whole arrival is already past its SLO: count it out
+            # instead of queueing work nobody is waiting for
+            self.counters["shed_requests"] += n
+            self.counters["deadline_misses"] += n
+        full = np.full((cfg.batch,), -1, np.int32)
+        t0s = np.full((cfg.batch,), now, np.float64)
+        att = np.zeros((cfg.batch,), np.int32)
+        k = 0
+        if n and not shed:
+            # new requests first: returned rows[:n] stay aligned with the
+            # caller's ids
+            full[:n] = ids_np
+            t0s[:n] = t_sched
+            k = n
+        while self._retryq and k < cfg.batch:
+            rid, rt0, ratt = self._retryq.popleft()
+            if (cfg.deadline_us > 0 and cfg.shed_policy == "deadline"
+                    and (now - rt0) * 1e6 > cfg.deadline_us):
+                self.counters["shed_requests"] += 1
+                self.counters["deadline_misses"] += 1
+                continue
+            full[k] = rid
+            t0s[k] = rt0
+            att[k] = ratt
+            k += 1
+        tick = self.ticks + 1
+        sched = cfg.faults
+        if sched is not None:
+            # host-visible latency spike: the dispatch path stalls (a
+            # remote NIC hiccup), deterministically per the schedule
+            d_us = sched.spike(tick)
+            if d_us > 0.0:
+                time.sleep(d_us * 1e-6)
+        degraded = False
+        if self._health is not None and self.breaker_open:
+            degraded = tick % cfg.breaker_probe_every != 0
+            if degraded:
+                self.counters["degraded_ticks"] += 1
+        ids = jnp.asarray(full)
+        if self._access is not None:
+            S, R = cfg.shards, cfg.batch // cfg.shards
+            fn = self._access_deg if degraded else self._access
+            self.state, out, sv = fn(self.state, ids.reshape(S, R))
+            rows_full = out.reshape(cfg.batch, -1)
+            served = sv.reshape(cfg.batch)
+        else:
+            plan = (self._plan_deg if degraded else self._plan)(
+                self.state, ids)
+            self.state, rows_full = self._exec(self.state, ids, plan)
+            served = plan.served
+        self._inflight.append(_Inflight(rows_full, t_sched, n,
+                                        served, full, t0s, att))
+        if self._health is not None:
+            self._breaker_step()
+        if shed:
+            return jnp.zeros((n, rows_full.shape[1]), rows_full.dtype)
+        return rows_full[:n] if n < cfg.batch else rows_full
+
+    def _maintenance(self):
+        """Per-tick background work (evacuation slices, epoch governor)."""
         if self._evac is not None:
             if self.cfg.evac_budget > 0:
                 # background evacuation: the foreground round's 16-page
@@ -286,10 +540,6 @@ class Engine:
         if self._epoch is not None and self._epoch_due():
             self.state = self._epoch(self.state)
             self._probe = None          # watermark restarts from the epoch
-        limit = 0 if self.cfg.dispatch == "sync" else self.cfg.pipeline_depth
-        while len(self._inflight) > limit:
-            self._retire_one()
-        return rows
 
     def _epoch_due(self) -> bool:
         """Load-aware epoch schedule: the tick period (``epoch_every``) is
@@ -313,16 +563,103 @@ class Engine:
             return due
         return False
 
-    def _retire_one(self):
-        t_sched, rows, n = self._inflight.popleft()
-        # block only on the result actually being returned to a client
+    def _breaker_step(self):
+        """Async circuit-breaker update — same non-blocking shape as
+        ``_epoch_due``: start a cumulative (failures, attempts) probe,
+        poll it with ``is_ready()`` on later ticks, and act on the delta
+        since the previous reading.  Open at ``breaker_threshold``; close
+        only once a window reads back at threshold * hysteresis (while
+        open, only probe ticks attempt fetches, so the window's fraction
+        is exactly the probes' health)."""
+        cfg = self.cfg
+        if self._hprobe is None:
+            self._hprobe = self._health(self.state)
+            if cfg.dispatch != "sync":
+                return                  # poll on a later tick
+        if cfg.dispatch != "sync" and not self._hprobe.is_ready():
+            return
+        cur = np.asarray(jax.device_get(self._hprobe), np.float64)
+        self._hprobe = None
+        d_fail = float(cur[0] - self._hlast[0])
+        d_att = float(cur[1] - self._hlast[1])
+        self._hlast = cur
+        if d_att <= 0:
+            return                      # no fetch attempts -> no evidence
+        frac = d_fail / d_att
+        if not self.breaker_open and frac >= cfg.breaker_threshold:
+            self.breaker_open = True
+            self.counters["breaker_trips"] += 1
+        elif (self.breaker_open
+              and frac <= cfg.breaker_threshold * cfg.breaker_hysteresis):
+            self.breaker_open = False
+
+    def _wait_ready(self, rows):
+        """Block on a device result, with a watchdog: a wedged device call
+        raises ``TimeoutError`` after ``watchdog_s`` instead of hanging
+        the serving loop forever."""
+        wd = self.cfg.watchdog_s
+        if wd <= 0 or rows.is_ready():
+            rows.block_until_ready()
+            return
+        deadline = time.time() + wd
+        while not rows.is_ready():
+            if time.time() >= deadline:
+                raise TimeoutError(
+                    f"serving watchdog: in-flight batch still not ready "
+                    f"after {wd:.1f}s")
+            time.sleep(5e-5)
         rows.block_until_ready()
-        self.latency.record(t_sched, time.time(), n)
+
+    def _retire_one(self):
+        e = self._inflight.popleft()
+        # block only on the result actually being returned to a client
+        self._wait_ready(e.rows)
+        if e.served is None:
+            self.latency.record(e.t_sched, time.time(), e.n)
+            self.counters["served"] += e.n
+            return
+        cfg = self.cfg
+        sv = np.asarray(jax.device_get(e.served))
+        now = time.time()
+        real = e.ids >= 0
+        ok = real & sv
+        if ok.any():
+            lat = (now - e.t0s[ok]) * 1e6
+            self.latency.record_us(lat)
+            self.counters["served"] += int(ok.sum())
+            if cfg.deadline_us > 0:
+                self.counters["deadline_misses"] += int(
+                    (lat > cfg.deadline_us).sum())
+        # unserved slots: bounded retry, else shed (counted) — a request
+        # leaves the system exactly once, as served or as shed
+        for i in np.nonzero(real & ~sv)[0]:
+            if (cfg.max_retries > 0 and e.att[i] < cfg.max_retries
+                    and len(self._retryq) < cfg.retry_queue_cap):
+                self._retryq.append(
+                    (int(e.ids[i]), float(e.t0s[i]), int(e.att[i]) + 1))
+                self.counters["fetch_retries"] += 1
+            else:
+                self.counters["shed_requests"] += 1
 
     def drain(self):
         """Block on every in-flight batch (end of a workload)."""
         while self._inflight:
             self._retire_one()
+
+    def flush_retries(self):
+        """Drive the retry queue to empty with request-less ticks (end of a
+        workload): each tick re-dispatches up to ``batch`` queued retries.
+        Bounded — anything still unserved when attempts run out is shed."""
+        guard = 4 * (self.cfg.max_retries + 2)
+        while True:
+            self.drain()
+            if not self._retryq or guard <= 0:
+                break
+            self.submit(_EMPTY_IDS)
+            guard -= 1
+        while self._retryq:             # guard tripped: shed the leftovers
+            self._retryq.popleft()
+            self.counters["shed_requests"] += 1
 
     # -- synchronous convenience wrapper ------------------------------------
 
@@ -339,7 +676,12 @@ class Engine:
         With pacing, each batch's latency clock starts at its *scheduled*
         arrival time: serving earlier is impossible, serving later (the
         engine fell behind) counts the queueing delay — reproducing the
-        saturation knee of the paper's latency-throughput curves."""
+        saturation knee of the paper's latency-throughput curves.
+
+        Reports **goodput** (served requests / wall) next to raw
+        throughput ((served + shed) / wall): under faults the two split —
+        shed requests leave the system fast but serve nobody."""
+        t_run0 = time.time()
         next_arrival = time.time()
         for batch in workload:
             if offered_interarrival_s:
@@ -351,7 +693,7 @@ class Engine:
                     now = time.time()
                     if now >= next_arrival:
                         break
-                    if self._inflight and self._inflight[0][1].is_ready():
+                    if self._inflight and self._inflight[0].rows.is_ready():
                         self._retire_one()
                         continue
                     time.sleep(min(2e-4, next_arrival - now))
@@ -360,6 +702,9 @@ class Engine:
                 t_sched = None
             self.submit(batch, t_sched=t_sched)
         self.drain()
+        if self._robust:
+            self.flush_retries()
+        wall = max(time.time() - t_run0, 1e-9)
         if self.scfg is not None:
             raw = shardplane.stats_total(self.state)
             pf = shardplane.paging_fraction(self.scfg, self.state)
@@ -368,5 +713,10 @@ class Engine:
             pf = plane_lib.paging_fraction(self.pcfg, self.state)
         stats = {k: int(v) for k, v in
                  jax.device_get(raw)._asdict().items()}
+        served = self.counters["served"]
+        finished = served + self.counters["shed_requests"]
         return {"latency": self.latency.summary(), "stats": stats,
-                "paging_fraction": float(pf)}
+                "paging_fraction": float(pf),
+                "counters": dict(self.counters),
+                "goodput_rps": served / wall,
+                "throughput_rps": finished / wall}

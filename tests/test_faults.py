@@ -1,0 +1,475 @@
+"""Chaos tests: the deterministic fault model end to end.
+
+Covers the four layers the fault schedule threads through:
+
+  * the schedule itself — host/device bit-agreement, seed determinism;
+  * the batch plane — null-schedule bit-identity with the fault-free
+    engine, batch-vs-reference equivalence *under* faults for all three
+    planes, structural invariants through a mixed chaos soak, and the
+    no-partial-write guarantee (a faulted fetch/update leaves both tiers
+    untouched);
+  * the sharded exchange — per-shard fault streams, outage windows that
+    hit only the scheduled shard, same-seed determinism (oracle path;
+    the 8-device shard_map equivalence rides in tests/test_sharded.py's
+    environment and is gated the same way);
+  * the serving engine — fault-free robust engine bit-identical to the
+    plain one, retries that converge, deadline shedding, the circuit
+    breaker tripping into degraded paging-local mode and recovering,
+    bounded latency-tracker memory, and counter determinism.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PlaneConfig, baselines, check_invariants, create,
+                        evacuate, faults, peek)
+from repro.core import batch as batch_lib
+from repro.core import shardplane
+from repro.core import state as state_lib
+from repro.runtime.orchestrator import FailureInjector
+from repro.serving.engine import Engine, EngineConfig, LatencyTracker
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def mk(num_objs=96, obj_dim=4, page_objs=8, num_frames=6, num_vpages=40,
+       **kw):
+    kw.setdefault("kernel_impl", "ref")
+    cfg = PlaneConfig(num_objs=num_objs, obj_dim=obj_dim,
+                      page_objs=page_objs, num_frames=num_frames,
+                      num_vpages=num_vpages, **kw)
+    data = jnp.arange(num_objs * obj_dim, dtype=jnp.float32
+                      ).reshape(num_objs, obj_dim)
+    return cfg, data, create(cfg, data)
+
+
+def assert_states_equal(sa, sb, ctx=""):
+    for field in sa._fields:
+        for x, y in zip(jax.tree.leaves(getattr(sa, field)),
+                        jax.tree.leaves(getattr(sb, field))):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"PlaneState.{field} diverged {ctx}")
+
+
+def workload(n_objs, batch, steps, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(steps):
+        yield jnp.asarray(rng.randint(0, n_objs, size=batch), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the schedule itself
+# ---------------------------------------------------------------------------
+
+def test_schedule_host_device_agreement():
+    sched = faults.Schedule(seed=11, fail_prob=0.3,
+                            outages=((5, 8, 1),), fail_at=(12,))
+    keys = np.arange(64, dtype=np.int32)
+    for tick in [1, 3, 5, 7, 9, 12, 20]:
+        for shard in [0, 1]:
+            dev = np.asarray(sched.fetch_fail(tick, jnp.asarray(keys), shard))
+            host = np.array([sched.fails(tick, int(k), shard) for k in keys])
+            np.testing.assert_array_equal(dev, host,
+                                          err_msg=f"tick={tick} sh={shard}")
+
+
+def test_schedule_determinism_and_seeds():
+    a = faults.Schedule(seed=1, fail_prob=0.25)
+    b = faults.Schedule(seed=1, fail_prob=0.25)
+    c = faults.Schedule(seed=2, fail_prob=0.25)
+    keys = jnp.arange(256)
+    for tick in range(4):
+        ma, mb = a.fetch_fail(tick, keys), b.fetch_fail(tick, keys)
+        assert jnp.array_equal(ma, mb)
+    assert any(not jnp.array_equal(a.fetch_fail(t, keys),
+                                   c.fetch_fail(t, keys))
+               for t in range(4)), "different seeds never diverged"
+    # shards get decorrelated streams
+    assert not jnp.array_equal(a.fetch_fail(1, keys, 0),
+                               a.fetch_fail(1, keys, 1))
+
+
+def test_null_schedule_is_inert():
+    assert not faults.NULL.active
+    assert not faults.Schedule(spike_prob=0.5, spike_us=100.0).active
+    assert not np.any(np.asarray(faults.NULL.fetch_fail(3, jnp.arange(8))))
+    assert faults.NULL.spike(3) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# batch plane under faults
+# ---------------------------------------------------------------------------
+
+def test_null_faults_bit_identical_plane():
+    """faults=NULL wired into the config is bit-identical to faults=None."""
+    cfg0, _, s0 = mk()
+    cfgN, _, sN = mk(faults=faults.NULL)
+    for ids in workload(96, 16, 12, seed=3):
+        p0 = batch_lib.plan_access(cfg0, s0, ids)
+        pN = batch_lib.plan_access(cfgN, sN, ids)
+        assert jnp.array_equal(p0.served, pN.served)
+        assert jnp.array_equal(p0.served, ids >= 0)
+        assert int(pN.n_failed) == 0
+        s0, r0 = batch_lib.execute_access(cfg0, s0, ids, p0)
+        sN, rN = batch_lib.execute_access(cfgN, sN, ids, pN)
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(rN))
+    assert_states_equal(s0, sN, "null-schedule plane")
+
+
+@pytest.mark.parametrize("plane", ["hybrid", "paging", "object"])
+def test_batch_vs_reference_under_faults(plane):
+    """The vectorized executor and the scalar oracle agree bit-for-bit on
+    the SAME fault-holed plan — rows, served masks and full state."""
+    sched = faults.Schedule(seed=5, fail_prob=0.25, outages=((4, 7, -1),))
+    cfg, _, sb = mk(faults=sched)
+    sr = sb
+    fn = {"hybrid": batch_lib.access,
+          "paging": batch_lib.paging_access,
+          "object": baselines.object_access}[plane]
+    seed = {"hybrid": 1, "paging": 2, "object": 3}[plane]
+    for i, ids in enumerate(workload(96, 16, 15, seed=seed)):
+        sb, rb = fn(cfg, sb, ids, mode="batch")
+        sr, rr = fn(cfg, sr, ids, mode="reference")
+        np.testing.assert_array_equal(np.asarray(rb), np.asarray(rr),
+                                      err_msg=f"{plane} rows step {i}")
+    assert_states_equal(sb, sr, f"{plane} under faults")
+    assert int(sb.stats.fetch_failures) > 0, "schedule never fired"
+
+
+def test_chaos_soak_invariants_and_determinism():
+    """Mixed access/update/evacuate under a failure schedule: structural
+    invariants hold at every step and the whole trajectory is a pure
+    function of the seed."""
+    sched = faults.Schedule(seed=9, fail_prob=0.2, outages=((6, 10, -1),))
+
+    def soak():
+        cfg, data, s = mk(faults=sched)
+        rng = np.random.RandomState(1)
+        for i in range(24):
+            ids = jnp.asarray(rng.randint(0, 96, size=16), jnp.int32)
+            op = i % 3
+            if op == 0:
+                s, _ = batch_lib.access(cfg, s, ids)
+            elif op == 1:
+                rows = jnp.asarray(
+                    rng.standard_normal((16, cfg.obj_dim)), jnp.float32)
+                s = batch_lib.update(cfg, s, ids, rows)
+            else:
+                s = evacuate(cfg, s)
+            check_invariants(cfg, s)
+        return cfg, s
+
+    cfg, sa = soak()
+    _, sb = soak()
+    assert_states_equal(sa, sb, "chaos soak replay")
+    assert int(sa.stats.fetch_failures) > 0
+
+
+def test_faulted_update_writes_nothing():
+    """No-partial-write: at a tick where every remote fetch fails, an
+    update of remote objects mutates NEITHER tier — a later read sees the
+    pre-fault values exactly."""
+    # the plane's device tick for the k-th access/update is k+1
+    sched = faults.Schedule(seed=0, fail_at=(1,))
+    cfg, data, s = mk(faults=sched)
+    ids = jnp.arange(16, dtype=jnp.int32)        # all remote in fresh state
+    before = peek(cfg, s, ids)
+    new_rows = jnp.full((16, cfg.obj_dim), 123.0, jnp.float32)
+    s = batch_lib.update(cfg, s, ids, new_rows)  # tick 1: everything faults
+    check_invariants(cfg, s)
+    np.testing.assert_array_equal(np.asarray(peek(cfg, s, ids)),
+                                  np.asarray(before))
+    # tick 2 is clean: the retry lands the write
+    s = batch_lib.update(cfg, s, ids, new_rows)
+    np.testing.assert_array_equal(np.asarray(peek(cfg, s, ids)),
+                                  np.asarray(new_rows))
+
+
+# ---------------------------------------------------------------------------
+# sharded exchange under faults
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_soak_served_and_determinism(shards):
+    sched = faults.Schedule(seed=13, fail_prob=0.2)
+    base, _, _ = mk(num_objs=96 * shards, num_frames=6 * shards,
+                    num_vpages=40 * shards, faults=sched)
+    scfg = shardplane.make_config(base, shards, 16, plane="hybrid")
+
+    def soak():
+        data = jnp.arange(base.num_objs * base.obj_dim, dtype=jnp.float32
+                          ).reshape(base.num_objs, base.obj_dim)
+        states = shardplane.create(scfg, data)
+        rng = np.random.RandomState(2)
+        sv_all = []
+        for _ in range(10):
+            ids = jnp.asarray(
+                rng.randint(0, base.num_objs, size=(shards, 16)), jnp.int32)
+            states, rows, sv = shardplane.access(scfg, states, ids,
+                                                 with_served=True)
+            sv_all.append(np.asarray(sv))
+            assert rows.shape == (shards, 16, base.obj_dim)
+        for k in range(shards):
+            check_invariants(scfg.shard, jax.tree.map(
+                lambda x: x[k], states))
+        return states, np.stack(sv_all)
+
+    states_a, sv_a = soak()
+    states_b, sv_b = soak()
+    np.testing.assert_array_equal(sv_a, sv_b)
+    assert_states_equal(states_a, states_b, f"sharded soak S={shards}")
+    assert int(jnp.sum(states_a.stats.fetch_failures)) > 0
+    assert not sv_a.all(), "no request was ever fault-masked"
+
+
+@needs8
+@pytest.mark.parametrize("shards", [2, 4])
+def test_shard_map_served_channel_matches_oracle(shards):
+    """The with_served shard_map program is bit-identical to the vmap
+    oracle under faults — rows, served verdicts and full state."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import mesh as mesh_lib
+
+    sched = faults.Schedule(seed=17, fail_prob=0.2, outages=((3, 6, 1),))
+    base, _, _ = mk(num_objs=96 * shards, num_frames=6 * shards,
+                    num_vpages=40 * shards, faults=sched)
+    scfg = shardplane.make_config(base, shards, 16, plane="hybrid")
+    data = jnp.arange(base.num_objs * base.obj_dim, dtype=jnp.float32
+                      ).reshape(base.num_objs, base.obj_dim)
+    s_emu = shardplane.create(scfg, data)
+    mesh = mesh_lib.make_far_mesh(shards)
+    s_dev = jax.device_put(s_emu, jax.tree.map(
+        lambda _: NamedSharding(mesh, P("far")), s_emu))
+    a_emu = shardplane.jitted_access(scfg, with_served=True)
+    a_dev = shardplane.jitted_access(scfg, mesh=mesh, with_served=True)
+    rng = np.random.RandomState(6)
+    for t in range(6):
+        ids = jnp.asarray(rng.randint(0, base.num_objs, size=(shards, 16)),
+                          jnp.int32)
+        s_emu, r_emu, v_emu = a_emu(s_emu, ids)
+        s_dev, r_dev, v_dev = a_dev(s_dev, ids)
+        np.testing.assert_array_equal(np.asarray(r_emu), np.asarray(r_dev),
+                                      err_msg=f"rows t={t}")
+        np.testing.assert_array_equal(np.asarray(v_emu), np.asarray(v_dev),
+                                      err_msg=f"served t={t}")
+    assert_states_equal(s_emu, s_dev, f"shard_map served S={shards}")
+    assert int(jnp.sum(s_emu.stats.fetch_failures)) > 0
+
+
+def test_sharded_outage_hits_only_scheduled_shard():
+    sched = faults.Schedule(seed=3, outages=((1, 12, 1),))
+    base, _, _ = mk(num_objs=192, num_frames=12, num_vpages=80,
+                    faults=sched)
+    scfg = shardplane.make_config(base, 2, 16, plane="hybrid")
+    data = jnp.arange(192 * 4, dtype=jnp.float32).reshape(192, 4)
+    states = shardplane.create(scfg, data)
+    rng = np.random.RandomState(4)
+    for _ in range(8):
+        ids = jnp.asarray(rng.randint(0, 192, size=(2, 16)), jnp.int32)
+        states, _, _ = shardplane.access(scfg, states, ids, with_served=True)
+    per_shard = np.asarray(states.stats.fetch_failures)
+    assert per_shard[1] > 0, "outage shard saw no failures"
+    assert per_shard[0] == 0, "outage leaked onto a healthy shard"
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def mk_engine_pair(plane="hybrid", robust_kw=None, n_objs=256, frames=12,
+                   batch=16, dispatch="sync", shards=1, faults_sched=None):
+    pcfg = PlaneConfig(num_objs=n_objs, obj_dim=8, page_objs=8,
+                       num_frames=frames, num_vpages=3 * (n_objs // 8),
+                       kernel_impl="ref")
+    data = jnp.arange(n_objs * 8, dtype=jnp.float32).reshape(n_objs, 8)
+    ecfg = EngineConfig(plane=plane, batch=batch, dispatch=dispatch,
+                        shards=shards, faults=faults_sched,
+                        **(robust_kw or {}))
+    return Engine(ecfg, pcfg, data), pcfg, data
+
+
+@pytest.mark.parametrize("plane", ["hybrid", "paging", "object"])
+def test_engine_fault_free_robust_bit_identical(plane):
+    """All robustness features armed + a null schedule == today's engine:
+    same rows, same plane state, same device stats."""
+    eng_r, pcfg, data = mk_engine_pair(
+        plane, faults_sched=faults.NULL,
+        robust_kw=dict(max_retries=3, deadline_us=1e9,
+                       breaker_threshold=0.5))
+    eng_0 = Engine(EngineConfig(plane=plane, batch=16, dispatch="sync"),
+                   pcfg, data)
+    rng = np.random.RandomState(0)
+    for _ in range(10):
+        ids = rng.randint(0, 256, size=16).astype(np.int32)
+        r0 = eng_0.serve_batch(ids)
+        rr = eng_r.serve_batch(ids)
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(rr))
+    assert_states_equal(eng_0.state, eng_r.state, f"engine {plane}")
+    c = eng_r.counters
+    assert c["fetch_retries"] == 0 and c["shed_requests"] == 0
+    assert c["degraded_ticks"] == 0 and not eng_r.breaker_open
+    assert c["served"] == 160
+
+
+def test_engine_retries_recover_goodput():
+    sched = faults.Schedule(seed=7, fail_prob=0.2)
+    eng, _, data = mk_engine_pair(faults_sched=sched,
+                                  robust_kw=dict(max_retries=6))
+    wl = [np.random.RandomState(s).randint(0, 256, size=16).astype(np.int32)
+          for s in range(30)]
+    out = eng.run(wl)
+    c = out["counters"]
+    assert c["fetch_retries"] > 0
+    assert c["served"] + c["shed_requests"] == 30 * 16
+    assert c["served"] >= int(0.99 * 30 * 16)
+    assert out["stats"]["fetch_failures"] > 0
+    assert out["goodput_rps"] <= out["throughput_rps"]
+    assert out["latency"]["n"] == c["served"]
+
+
+def test_engine_retry_serves_correct_value():
+    """A retried GET returns the same bytes a fault-free serve would."""
+    sched = faults.Schedule(seed=2, fail_at=(2,))   # warmup=tick1; tick2 dies
+    eng, _, data = mk_engine_pair(faults_sched=sched,
+                                  robust_kw=dict(max_retries=2))
+    # ids 16..31: two pages the warmup tick (which touches page 0) never
+    # faulted in, so every request here needs a remote fetch
+    ids = np.arange(16, 32, dtype=np.int32)
+    eng.serve_batch(ids)            # tick 2: every fetch faults -> queued
+    assert len(eng._retryq) == 16
+    eng.flush_retries()             # tick 3 is clean
+    assert not eng._retryq
+    assert eng.counters["served"] == 16
+    rows = eng.serve_batch(ids)     # now local: must be the true rows
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(data)[ids])
+
+
+def test_engine_deadline_shed_at_admission():
+    eng, _, _ = mk_engine_pair(
+        faults_sched=faults.NULL,
+        robust_kw=dict(deadline_us=1000.0, max_retries=1))
+    ids = np.arange(16, dtype=np.int32)
+    rows = eng.submit(ids, t_sched=time.time() - 1.0)   # 1s late: shed
+    eng.drain()
+    assert rows.shape == (16, 8)
+    assert eng.counters["shed_requests"] == 16
+    assert eng.counters["deadline_misses"] >= 16
+    assert eng.counters["served"] == 0
+
+
+def test_engine_breaker_degrades_and_recovers():
+    sched = faults.Schedule(seed=7, outages=((10, 40, -1),))
+    kw = dict(max_retries=1, breaker_threshold=0.5, breaker_probe_every=4)
+
+    def drive():
+        eng, _, _ = mk_engine_pair(faults_sched=sched, robust_kw=kw)
+        tripped = False
+        for s in range(60):
+            ids = np.random.RandomState(s).randint(
+                0, 256, size=16).astype(np.int32)
+            eng.submit(ids)
+            eng.drain()
+            tripped |= eng.breaker_open
+        eng.flush_retries()
+        return eng, tripped
+
+    eng, tripped = drive()
+    assert tripped, "breaker never opened during the outage"
+    assert not eng.breaker_open, "breaker failed to close after recovery"
+    assert eng.counters["breaker_trips"] >= 1
+    assert eng.counters["degraded_ticks"] > 0
+    assert eng.counters["served"] > 0
+    # same seed, same trajectory -> identical chaos accounting
+    eng2, _ = drive()
+    assert eng.counters == eng2.counters
+
+
+def test_engine_short_batch_single_compile():
+    eng, _, data = mk_engine_pair(dispatch="pipelined")
+    full = np.arange(16, dtype=np.int32)
+    short = np.arange(5, dtype=np.int32)
+    eng.serve_batch(full)
+    rows = eng.serve_batch(short)
+    assert rows.shape == (5, 8)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(data)[short])
+    # the -1 padding keeps one compiled (plan, execute) pair per engine
+    for fn in (eng._plan, eng._exec):
+        if hasattr(fn, "_cache_size"):
+            assert fn._cache_size() == 1
+
+
+def test_latency_tracker_bounded_memory():
+    lt = LatencyTracker(capacity=512)
+    rng = np.random.RandomState(0)
+    for _ in range(50):
+        lt.record_us(rng.rand(400) * 100.0)
+    assert lt.n == 20_000
+    assert len(lt.lat_us) == 512            # retained set stays bounded
+    s = lt.summary()
+    assert s["n"] == 20_000
+    assert 0.0 < s["p50_us"] < 100.0 and s["p99_us"] <= 100.0
+    assert abs(s["mean_us"] - 50.0) < 5.0   # exact streaming mean
+    # legacy scalar API still works and zero-arg construction is preserved
+    lt2 = LatencyTracker()
+    lt2.record(0.0, 1e-3, 3)
+    assert lt2.summary()["n"] == 3 and lt2.percentile(50) == pytest.approx(1e3)
+
+
+def test_engine_watchdog_raises_instead_of_hanging():
+    eng, _, _ = mk_engine_pair(robust_kw=dict(watchdog_s=0.05),
+                               faults_sched=faults.NULL)
+
+    class NeverReady:
+        def is_ready(self):
+            return False
+
+        def block_until_ready(self):  # pragma: no cover
+            raise AssertionError("watchdog must fire before blocking")
+
+    with pytest.raises(TimeoutError):
+        eng._wait_ready(NeverReady())
+
+
+# ---------------------------------------------------------------------------
+# orchestrator unification
+# ---------------------------------------------------------------------------
+
+def test_failure_injector_rides_the_schedule():
+    # legacy API: explicit steps, fire-once each
+    inj = FailureInjector(fail_at_steps=[7, 13])
+    fired = []
+    for step in range(20):
+        try:
+            inj.check(step)
+        except RuntimeError:
+            fired.append(step)
+            inj.check(step)             # restart of the same step: no re-fail
+    assert fired == [7, 13] and inj.failures == 2
+    assert inj.schedule.fail_at == (7, 13)
+
+    # seeded schedule: deterministic step loss, still fire-once
+    sched = faults.Schedule(seed=21, fail_prob=0.3)
+    a = FailureInjector(schedule=sched)
+    b = FailureInjector(schedule=sched)
+    hits_a = [s for s in range(40) if _trips(a, s)]
+    hits_b = [s for s in range(40) if _trips(b, s)]
+    assert hits_a == hits_b and 0 < len(hits_a) < 40
+    assert a.failures == len(hits_a)
+
+    # both together: extra explicit steps merge into the schedule
+    c = FailureInjector(fail_at_steps=[5], schedule=faults.Schedule(seed=21))
+    assert _trips(c, 5) and c.failures == 1
+
+
+def _trips(inj, step):
+    try:
+        inj.check(step)
+        return False
+    except RuntimeError:
+        return True
