@@ -669,16 +669,27 @@ def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     """Batched write-through-local: fault in, overwrite rows (last write
     wins for duplicate ids), mark dirty.  An unserved (fault-masked)
     request writes nothing — neither tier mutates, so a retry later sees
-    the pre-fault value (no partial writes)."""
+    the pre-fault value (no partial writes).
+
+    The plan is built against pre-step state (``plan_access`` never reads
+    ``s.step`` itself, so this matches the access path, where the serving
+    engine plans one device call ahead of the step increment — keeps the
+    fault-model tick stream identical across access and update)."""
+    plan = plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded)
+    return execute_update(cfg, s, obj_ids, rows, plan, mode=mode)
+
+
+def execute_update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
+                   rows: jnp.ndarray, plan: AccessPlan, *,
+                   mode: str | None = None) -> st.PlaneState:
+    """Execute a precomputed write-through plan: the second half of
+    ``update``, split out (like ``plan_access``/``execute_access``) so the
+    sharded exchange can interleave a round's plan and execute with the
+    neighbouring rounds' collectives (repro.core.shardplane)."""
     scalar = _resolve(cfg, mode)
     P, V, F = cfg.page_objs, cfg.num_vpages, cfg.num_frames
     R = obj_ids.shape[0]
     rows = rows.astype(cfg.dtype)
-    # plan against pre-step state (plan_access never reads s.step itself,
-    # so this matches the access path, where the serving engine plans one
-    # device call ahead of the step increment — keeps the fault-model tick
-    # stream identical across access and update)
-    plan = plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded)
     s = s._replace(step=s.step + 1)
     valid = obj_ids >= 0
     nv = jnp.sum(valid.astype(jnp.int32))

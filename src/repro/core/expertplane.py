@@ -42,6 +42,9 @@ class ExpertPlaneConfig:
     # plan-then-execute fetch engine (mirrors KVPlaneConfig.fetch_mode):
     fetch_mode: str = "batch"   # "batch" (vectorized) | "reference" (scalar)
     kernel_impl: str = "auto"   # kernels.ops dispatch for the batched movers
+    # fault model (repro.core.faults.Schedule; None == null schedule): a
+    # faulted expert fetch is masked out of the plan (see plan_fetch)
+    faults: object = None
 
 
 class ExpertPlaneState(NamedTuple):
@@ -86,6 +89,18 @@ def plan_fetch(cfg: ExpertPlaneConfig, s: ExpertPlaneState,
     missing = jnp.logical_and(needed_mask, s.slot_of < 0)
     _, fetch_ids = lax.top_k(missing.astype(jnp.int32), cfg.fetch_budget)
     expert = jnp.where(missing[fetch_ids], fetch_ids, -1).astype(jnp.int32)
+
+    # fault model (repro.core.faults): a faulted expert fetch drops out of
+    # the plan HERE — the same plan-time masking as kvplane/batch — so it
+    # never claims a slot or displaces a resident expert; its tokens are
+    # dropped and re-normalized by moe_decode (graceful degradation).
+    # Tick = s.step: moe_decode bumps the step BEFORE planning, where
+    # kvplane plans pre-bump and keys step + 1 — both address the stream
+    # entry of the step being decoded.
+    fc = cfg.faults
+    if fc is not None and fc.active:
+        fail = (expert >= 0) & fc.fetch_fail(s.step, jnp.maximum(expert, 0))
+        expert = jnp.where(fail, -1, expert)
 
     hosted_needed = jnp.where(s.expert_of >= 0,
                               needed_mask[jnp.maximum(s.expert_of, 0)], False)

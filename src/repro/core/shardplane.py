@@ -33,6 +33,21 @@ request is served within one ``access`` call no matter how skewed the
 batch; with the default budget (= ``shard_batch``) there is exactly one
 round and nothing ever spills.
 
+**Exchange scheduling** (``ShardedPlaneConfig.exchange``): the legacy
+``"serial"`` schedule runs pack -> a2a(ids) -> a2a(counts) -> serve ->
+a2a(rows) strictly in sequence, three collectives per round.  The default
+``"overlap"`` schedule (DESIGN.md §5d) fuses the side channels into one
+packed payload per direction (``kernels.ops.fuse_ids_counts`` /
+``fuse_rows_flags`` — two collectives per round) and software-pipelines
+the rounds: round r+1's pack + ingress collective is issued before round
+r's serve retires, and round r's return-row collective overlaps round
+r+1's serve (a ``fori`` steady state with a one-round prologue/epilogue
+and a depth-2 return buffer whose all\\ -1 dummy round collects as a
+bitwise no-op).  Both schedules compute identical values — the pack chain
+depends only on the request ids, so reordering its *issue* against the
+serves changes nothing — and every buffer keeps its fixed shape, so the
+spill protocol and the jit caches are untouched.
+
 The governor aggregates globally: ``advance_epoch`` all-gathers each
 shard's epoch byte deltas and hands every shard the same ``(d_page,
 d_obj)`` total, so the adaptive thresholds move in lockstep (a
@@ -60,6 +75,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..kernels import ops as kops
 from . import baselines
 from . import batch as batch_lib
 from . import plane as plane_lib
@@ -83,12 +99,14 @@ class ShardedPlaneConfig:
     shard_batch: int            # R: requests per shard per access call
     per_shard_budget: int       # B: ids exchanged per (src, dst) per round
     plane: str = "hybrid"       # hybrid | paging | object
+    exchange: str = "overlap"   # "overlap" pipelined 2-hop | "serial" 3-hop
 
     def __post_init__(self):
         assert self.shards >= 1
         assert self.shard_batch >= 1
         assert 1 <= self.per_shard_budget <= self.shard_batch
         assert self.plane in ("hybrid", "paging", "object"), self.plane
+        assert self.exchange in ("overlap", "serial"), self.exchange
 
     @property
     def rounds(self) -> int:
@@ -116,13 +134,15 @@ def shard_config(cfg: PlaneConfig, shards: int) -> PlaneConfig:
 
 def make_config(cfg: PlaneConfig, shards: int, shard_batch: int,
                 per_shard_budget: int | None = None,
-                plane: str = "hybrid") -> ShardedPlaneConfig:
+                plane: str = "hybrid",
+                exchange: str = "overlap") -> ShardedPlaneConfig:
     """Build a sharded config from a GLOBAL plane config.  The default
     budget (= ``shard_batch``) gives one exchange round and no spills."""
     return ShardedPlaneConfig(
         shard=shard_config(cfg, shards), shards=shards,
         shard_batch=shard_batch,
-        per_shard_budget=per_shard_budget or shard_batch, plane=plane)
+        per_shard_budget=per_shard_budget or shard_batch, plane=plane,
+        exchange=exchange)
 
 
 def create(cfg: ShardedPlaneConfig, initial: jnp.ndarray) -> st.PlaneState:
@@ -241,12 +261,15 @@ def _pack_payload(cfg: ShardedPlaneConfig, ids, rows, send):
 
 def _serve_update_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, payload,
                         me, *, mode):
-    """Apply one round's received writes to this shard's own plane."""
+    """Apply one round's received writes to this shard's own plane (the
+    same plan-then-execute split as ``_serve_round``, so the pipelined
+    schedule interleaves write rounds exactly like read rounds)."""
     S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
     ok = recv >= 0
     lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
-    s = batch_lib.update(cfg.shard, s, lids, payload.reshape(S * B, D),
-                         mode=mode, shard=me)
+    plan = batch_lib.plan_access(cfg.shard, s, lids, shard=me)
+    s = batch_lib.execute_update(cfg.shard, s, lids,
+                                 payload.reshape(S * B, D), plan, mode=mode)
     extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
     return s._replace(stats=st.bump(s.stats, hits=extra))
 
@@ -266,6 +289,136 @@ def _bump_spills(states, spills):
 
 
 # --------------------------------------------------------------------------
+# round schedules (written ONCE; the vmap oracle and the shard_map bodies
+# inject their own phase closures + collective, so both exchanges execute
+# the identical op sequence on both backends)
+# --------------------------------------------------------------------------
+
+def _sched_access(cfg: ShardedPlaneConfig, states, ids, *, pack, serve,
+                  collect, collect_sv, a2a, with_served):
+    """Run every exchange round of one access call.
+
+    ``pack(ids, todo) -> (send, cnt, todo', n_spill)``;
+    ``serve(states, recv, recv_cnt) -> (states, rows, served)``;
+    ``collect(out, ids, send, rows) -> out``;
+    ``collect_sv(out_sv, ids, send, served) -> out_sv``;
+    ``a2a`` is the direction transpose (``lax.all_to_all`` inside
+    shard_map, a stacked-axis swap on the oracle).  Leading dims come from
+    ``ids`` (``[S, R]`` oracle / ``[R]`` per-shard), so the same code
+    serves both callers."""
+    S, B = cfg.shards, cfg.per_shard_budget
+    R, D = cfg.shard_batch, cfg.shard.obj_dim
+    lead = ids.shape[:-1]
+    todo = ids >= 0
+    out = jnp.zeros(lead + (R, D), cfg.shard.dtype)
+    out_sv = jnp.zeros(lead + (R,), bool)
+    spills = jnp.zeros(lead, jnp.int32)
+
+    if cfg.exchange == "serial":
+        # legacy strictly-ordered schedule: three (four with the served
+        # channel) collectives per round, each on its own dependence chain
+        for _ in range(cfg.rounds):
+            send, cnt, todo, nsp = pack(ids, todo)
+            spills = spills + nsp
+            states, rows, sv = serve(states, a2a(send), a2a(cnt))
+            out = collect(out, ids, send, a2a(rows))
+            if with_served:
+                out_sv = collect_sv(out_sv, ids, send, a2a(sv))
+        return _bump_spills(states, spills), out, out_sv
+
+    # -- overlap: fused payloads + software-pipelined rounds ---------------
+    def serve_f(states, ing):
+        recv, recv_cnt = kops.split_ids_counts(ing)
+        states, rows, sv = serve(states, recv, recv_cnt)
+        return states, kops.fuse_rows_flags(rows, sv)
+
+    def collect_f(out, out_sv, send, ret):
+        rows, sv = kops.split_rows_flags(ret)
+        out = collect(out, ids, send, rows)
+        if with_served:
+            out_sv = collect_sv(out_sv, ids, send, sv)
+        return out, out_sv
+
+    # prologue: round 0's ingress is on the wire before any serve runs
+    send, cnt, todo, nsp = pack(ids, todo)
+    spills = spills + nsp
+    ing = a2a(kops.fuse_ids_counts(send, cnt))
+    # depth-2 return buffer; the all -1 dummy send matches no request, so
+    # the first (dummy) collect is a bitwise no-op
+    prev_send = jnp.full(lead + (S, B), -1, jnp.int32)
+    prev_ret = jnp.zeros(lead + (S, B, D + 1), cfg.shard.dtype)
+
+    def body(_, c):
+        states, todo, out, out_sv, spills, send, ing, p_send, p_ret = c
+        # issue round r+1's pack + ingress collective FIRST: it depends
+        # only on the request ids, so it overlaps round r's serve below
+        n_send, n_cnt, todo, nsp = pack(ids, todo)
+        spills = spills + nsp
+        n_ing = a2a(kops.fuse_ids_counts(n_send, n_cnt))
+        states, ret = serve_f(states, ing)
+        # round r's egress overlaps round r+1's serve (collected next trip)
+        ret = a2a(ret)
+        out, out_sv = collect_f(out, out_sv, p_send, p_ret)
+        return (states, todo, out, out_sv, spills, n_send, n_ing, send, ret)
+
+    carry = (states, todo, out, out_sv, spills, send, ing,
+             prev_send, prev_ret)
+    if cfg.rounds > 1:
+        carry = lax.fori_loop(0, cfg.rounds - 1, body, carry)
+    states, todo, out, out_sv, spills, send, ing, prev_send, prev_ret = carry
+    # epilogue: serve the last round, then drain both outstanding returns
+    states, ret = serve_f(states, ing)
+    ret = a2a(ret)
+    out, out_sv = collect_f(out, out_sv, prev_send, prev_ret)
+    out, out_sv = collect_f(out, out_sv, send, ret)
+    return _bump_spills(states, spills), out, out_sv
+
+
+def _sched_update(cfg: ShardedPlaneConfig, states, ids, rows, *, pack,
+                  payload_of, serve, a2a):
+    """Write-through rounds: same two schedules as ``_sched_access`` minus
+    the egress leg (writes return nothing).  Overlap moves two collectives
+    per round — the fused ids+counts payload and the row payload (kept
+    separate: int32 ids cannot ride bit-safely in a bf16 row buffer)."""
+    lead = ids.shape[:-1]
+    todo = ids >= 0
+    spills = jnp.zeros(lead, jnp.int32)
+
+    if cfg.exchange == "serial":
+        for _ in range(cfg.rounds):
+            send, cnt, todo, nsp = pack(ids, todo)
+            spills = spills + nsp
+            payload = payload_of(ids, rows, send)
+            states = serve(states, a2a(send), a2a(cnt), a2a(payload))
+        return _bump_spills(states, spills)
+
+    def serve_f(states, ing, pay):
+        recv, recv_cnt = kops.split_ids_counts(ing)
+        return serve(states, recv, recv_cnt, pay)
+
+    send, cnt, todo, nsp = pack(ids, todo)
+    spills = spills + nsp
+    ing = a2a(kops.fuse_ids_counts(send, cnt))
+    pay = a2a(payload_of(ids, rows, send))
+
+    def body(_, c):
+        states, todo, spills, ing, pay = c
+        n_send, n_cnt, todo, nsp = pack(ids, todo)
+        spills = spills + nsp
+        n_ing = a2a(kops.fuse_ids_counts(n_send, n_cnt))
+        n_pay = a2a(payload_of(ids, rows, n_send))
+        states = serve_f(states, ing, pay)
+        return (states, todo, spills, n_ing, n_pay)
+
+    carry = (states, todo, spills, ing, pay)
+    if cfg.rounds > 1:
+        carry = lax.fori_loop(0, cfg.rounds - 1, body, carry)
+    states, todo, spills, ing, pay = carry
+    states = serve_f(states, ing, pay)
+    return _bump_spills(states, spills)
+
+
+# --------------------------------------------------------------------------
 # single-device oracle: vmap over shards, collectives as transposes
 # --------------------------------------------------------------------------
 
@@ -278,26 +431,18 @@ def access(cfg: ShardedPlaneConfig, states, ids, *, mode=None,
     rows [S, R, D])`` in request order — plus a ``served [S, R]`` bool
     when ``with_served`` (fault-model verdicts riding the exchange back
     to the requesters; padding is never served)."""
-    S, R, D = cfg.shards, cfg.shard_batch, cfg.shard.obj_dim
-    todo = ids >= 0
-    out = jnp.zeros((S, R, D), cfg.shard.dtype)
-    out_sv = jnp.zeros((S, R), bool)
-    spills = jnp.zeros((S,), jnp.int32)
+    S = cfg.shards
     me = jnp.arange(S, dtype=jnp.int32)
-    pack = jax.vmap(partial(_pack_round, cfg))
-    serve = jax.vmap(partial(_serve_round, cfg, mode=mode,
-                             degraded=degraded))
-    collect = jax.vmap(partial(_collect_round, cfg))
-    collect_sv = jax.vmap(partial(_collect_served, cfg))
-    for _ in range(cfg.rounds):
-        send, cnt, todo, nsp = pack(ids, todo)
-        spills = spills + nsp
-        # the emulated all_to_all: [S(src), S(dst), B] -> [S(dst), S(src), B]
-        states, rows, sv = serve(states, jnp.swapaxes(send, 0, 1),
-                                 jnp.swapaxes(cnt, 0, 1), me)
-        out = collect(out, ids, send, jnp.swapaxes(rows, 0, 1))
-        out_sv = collect_sv(out_sv, ids, send, jnp.swapaxes(sv, 0, 1))
-    states = _bump_spills(states, spills)
+    serve_v = jax.vmap(partial(_serve_round, cfg, mode=mode,
+                               degraded=degraded))
+    states, out, out_sv = _sched_access(
+        cfg, states, ids,
+        pack=jax.vmap(partial(_pack_round, cfg)),
+        serve=lambda st_, recv, cnt: serve_v(st_, recv, cnt, me),
+        collect=jax.vmap(partial(_collect_round, cfg)),
+        collect_sv=jax.vmap(partial(_collect_served, cfg)),
+        # the emulated all_to_all: [S(src), S(dst), ...] -> [S(dst), S(src), ...]
+        a2a=lambda x: jnp.swapaxes(x, 0, 1), with_served=with_served)
     if with_served:
         return states, out, out_sv
     return states, out
@@ -308,20 +453,14 @@ def update(cfg: ShardedPlaneConfig, states, ids, rows, *, mode=None):
     if cfg.plane != "hybrid":
         raise ValueError("sharded update is a hybrid-plane operation")
     S = cfg.shards
-    todo = ids >= 0
-    spills = jnp.zeros((S,), jnp.int32)
     me = jnp.arange(S, dtype=jnp.int32)
-    pack = jax.vmap(partial(_pack_round, cfg))
-    payload_of = jax.vmap(partial(_pack_payload, cfg))
-    serve = jax.vmap(partial(_serve_update_round, cfg, mode=mode))
-    for _ in range(cfg.rounds):
-        send, cnt, todo, nsp = pack(ids, todo)
-        spills = spills + nsp
-        payload = payload_of(ids, rows, send)
-        states = serve(states, jnp.swapaxes(send, 0, 1),
-                       jnp.swapaxes(cnt, 0, 1),
-                       jnp.swapaxes(payload, 0, 1), me)
-    return _bump_spills(states, spills)
+    serve_v = jax.vmap(partial(_serve_update_round, cfg, mode=mode))
+    return _sched_update(
+        cfg, states, ids, rows,
+        pack=jax.vmap(partial(_pack_round, cfg)),
+        payload_of=jax.vmap(partial(_pack_payload, cfg)),
+        serve=lambda st_, recv, cnt, pay: serve_v(st_, recv, cnt, pay, me),
+        a2a=lambda x: jnp.swapaxes(x, 0, 1))
 
 
 def advance_epoch(cfg: ShardedPlaneConfig, states):
@@ -356,19 +495,14 @@ def _access_body(cfg: ShardedPlaneConfig, mode, degraded, with_served,
     s = jax.tree.map(lambda x: x[0], states)
     ids = ids[0]
     me = lax.axis_index("far").astype(jnp.int32)
-    R, D = cfg.shard_batch, cfg.shard.obj_dim
-    todo = ids >= 0
-    out = jnp.zeros((R, D), cfg.shard.dtype)
-    out_sv = jnp.zeros((R,), bool)
-    spills = jnp.zeros((), jnp.int32)
-    for _ in range(cfg.rounds):
-        send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
-        spills = spills + nsp
-        s, rows, sv = _serve_round(cfg, s, _a2a(send), _a2a(cnt), me,
-                                   mode=mode, degraded=degraded)
-        out = _collect_round(cfg, out, ids, send, _a2a(rows))
-        out_sv = _collect_served(cfg, out_sv, ids, send, _a2a(sv))
-    s = _bump_spills(s, spills)
+    s, out, out_sv = _sched_access(
+        cfg, s, ids,
+        pack=partial(_pack_round, cfg),
+        serve=lambda st_, recv, cnt: _serve_round(
+            cfg, st_, recv, cnt, me, mode=mode, degraded=degraded),
+        collect=partial(_collect_round, cfg),
+        collect_sv=partial(_collect_served, cfg),
+        a2a=_a2a, with_served=with_served)
     s = jax.tree.map(lambda x: x[None], s)
     if with_served:
         return s, out[None], out_sv[None]
@@ -379,15 +513,13 @@ def _update_body(cfg: ShardedPlaneConfig, mode, states, ids, rows):
     s = jax.tree.map(lambda x: x[0], states)
     ids, rows = ids[0], rows[0]
     me = lax.axis_index("far").astype(jnp.int32)
-    todo = ids >= 0
-    spills = jnp.zeros((), jnp.int32)
-    for _ in range(cfg.rounds):
-        send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
-        spills = spills + nsp
-        payload = _pack_payload(cfg, ids, rows, send)
-        s = _serve_update_round(cfg, s, _a2a(send), _a2a(cnt), _a2a(payload),
-                                me, mode=mode)
-    s = _bump_spills(s, spills)
+    s = _sched_update(
+        cfg, s, ids, rows,
+        pack=partial(_pack_round, cfg),
+        payload_of=partial(_pack_payload, cfg),
+        serve=lambda st_, recv, cnt, pay: _serve_update_round(
+            cfg, st_, recv, cnt, pay, me, mode=mode),
+        a2a=_a2a)
     return jax.tree.map(lambda x: x[None], s)
 
 
@@ -407,6 +539,35 @@ def _evac_body(cfg: ShardedPlaneConfig, garbage_threshold, max_pages,
     s = plane_lib.evacuate(cfg.shard, s, garbage_threshold=garbage_threshold,
                            max_pages=max_pages, clear_access=clear_access)
     return jax.tree.map(lambda x: x[None], s)
+
+
+def _probe_body(cfg: ShardedPlaneConfig, phase, ids):
+    """Truncated exchange for phase attribution: ``"pack"`` runs every
+    round's pack; ``"ingress"`` additionally moves the fused ingress
+    payload.  Returns a per-shard checksum so nothing dead-code
+    eliminates."""
+    ids = ids[0]
+    todo = ids >= 0
+    acc = jnp.zeros((), jnp.int32)
+    for _ in range(cfg.rounds):
+        send, cnt, todo, nsp = _pack_round(cfg, ids, todo)
+        x = kops.fuse_ids_counts(send, cnt)
+        if phase == "ingress":
+            x = _a2a(x)
+        acc = acc + jnp.sum(x) + nsp
+    return acc[None]
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_phase_probe(cfg: ShardedPlaneConfig, phase: str, mesh):
+    """Benchmark-only probe (benchmarks/fig_shard.py): timing ``"pack"``,
+    then ``"ingress"`` (pack + fused collective), then a full access gives
+    the subtractive pack / collective / serve wall-share breakdown."""
+    assert phase in ("pack", "ingress"), phase
+    fn = shard_map(partial(_probe_body, cfg, phase), mesh=mesh,
+                   in_specs=(P("far"),), out_specs=P("far"),
+                   check_rep=False)
+    return jax.jit(fn)
 
 
 # --------------------------------------------------------------------------

@@ -145,3 +145,38 @@ def page_scores(q, kmax, kmin, *, impl="auto"):
         blk //= 2
     return _scores_pallas(q.reshape(B, KVH, G, Dh), kmax, kmin,
                           block_pages=blk, interpret=(m == "interpret"))
+
+
+# --------------------------------------------------------------------------
+# packed-payload layouts for the sharded exchange (repro.core.shardplane)
+# --------------------------------------------------------------------------
+# The exchange used to move ids, duplicate counts and served flags as
+# separate collectives; these helpers fuse the side channels into ONE
+# payload per direction so each round pays exactly two all_to_all hops.
+# They are axis-agnostic (pure stack/concat on the trailing axes), so the
+# same layout serves the per-shard [S, B] buffers inside shard_map and the
+# stacked [S, S, B] buffers of the single-device oracle — fusing then
+# splitting is bitwise lossless either way.
+
+def fuse_ids_counts(ids, cnt):
+    """ids [..., B] int32 + cnt [..., B] int32 -> [..., 2, B] payload."""
+    return jnp.stack([ids, cnt], axis=-2)
+
+
+def split_ids_counts(payload):
+    """Inverse of :func:`fuse_ids_counts`."""
+    return payload[..., 0, :], payload[..., 1, :]
+
+
+def fuse_rows_flags(rows, flags):
+    """rows [..., B, D] + flags [..., B] bool -> [..., B, D+1] payload.
+
+    The bool rides as an extra 0/1 column in the row dtype — exact in
+    every float format down to bf16, so the round-trip is lossless."""
+    return jnp.concatenate(
+        [rows, flags[..., None].astype(rows.dtype)], axis=-1)
+
+
+def split_rows_flags(payload):
+    """Inverse of :func:`fuse_rows_flags`."""
+    return payload[..., :-1], payload[..., -1] > 0

@@ -71,6 +71,14 @@ def far_specs(tree):
     return jax.tree.map(lambda _: P("far"), tree)
 
 
+def put_far(tree, mesh: Mesh):
+    """Lay a stacked ``[shards, ...]`` plane pytree out on a ``far`` mesh
+    (one shard slice per device) — the device_put every sharded caller
+    (engine, tests, benchmarks) used to hand-roll."""
+    return jax.device_put(tree, jax.tree.map(
+        lambda _: NamedSharding(mesh, P("far")), tree))
+
+
 # Logical-axis layout: "2d" (default) = FSDP over (pod, data) x TP over
 # model; "fsdp" = pure ZeRO-3 over every mesh axis, no tensor parallelism
 # (dense-arch training at large global batch — §Perf iteration 3).

@@ -106,6 +106,12 @@ class EngineConfig:
     # Per-(src, dst) id budget per exchange round (0 = auto: one round,
     # budget = batch/shards, nothing ever spills).
     shard_budget: int = 0
+    # Exchange schedule: "overlap" (default) fuses the side channels into
+    # one collective per direction and software-pipelines the rounds so
+    # collectives overlap the local serves; "serial" is the legacy
+    # strictly-ordered 3-hop schedule (bit-identical results — the
+    # equivalence suite runs both).
+    shard_exchange: str = "overlap"
     # ---- robust / chaos serving ------------------------------------------
     # Deterministic fault schedule (repro.core.faults.Schedule) injected
     # into the plane config: remote fetches fail per the schedule, plans
@@ -256,13 +262,12 @@ class Engine:
                 f"{cfg.shards} shards")
             self.scfg = scfg = shardplane.make_config(
                 pcfg, cfg.shards, cfg.batch // cfg.shards,
-                cfg.shard_budget or None, plane=cfg.plane)
+                cfg.shard_budget or None, plane=cfg.plane,
+                exchange=cfg.shard_exchange)
             self.state = shardplane.create(scfg, initial)
             if mesh is not None:
-                from jax.sharding import NamedSharding, PartitionSpec
-                self.state = jax.device_put(self.state, jax.tree.map(
-                    lambda _: NamedSharding(mesh, PartitionSpec("far")),
-                    self.state))
+                from repro.launch import mesh as mesh_lib
+                self.state = mesh_lib.put_far(self.state, mesh)
             # fused access: the exchange already interleaves plan+execute
             # per round, so there is no host-visible plan/execute split.
             # Robust engines take the served-channel variant (the verdicts
@@ -338,18 +343,26 @@ class Engine:
                 + (s.stats.obj_ins - s.epoch_obj_ins).astype(jnp.float32)
                 * rb))
         if breaker_on:
-            # health probe: cumulative (failed, attempted) remote fetches.
-            # Attempts = successful ingress + failures, so degraded ticks
-            # (which fetch nothing) contribute ~nothing to either side and
-            # a window's fraction measures exactly its *probe* tick's
-            # health — the breaker can close off one good probe.
+            # health probe: cumulative (failed, attempted) remote fetches,
+            # kept PER SHARD ([2, shards]; the unsharded plane is one
+            # "shard").  Attempts = successful ingress + failures, so
+            # degraded ticks (which fetch nothing) contribute ~nothing to
+            # either side and a window's fraction measures exactly its
+            # *probe* tick's health — the breaker can close off one good
+            # probe.  The per-shard columns make a single-shard outage
+            # attributable (``shard_fail_frac``) — the prerequisite for a
+            # per-shard breaker; the trip decision itself stays
+            # engine-global (summed over shards, exactly the old signal).
             self._health = jax.jit(lambda s: jnp.stack([
-                jnp.sum(s.stats.fetch_failures).astype(jnp.float32),
-                jnp.sum(s.stats.page_ins + s.stats.obj_ins
-                        + s.stats.fetch_failures).astype(jnp.float32)]))
+                jnp.atleast_1d(s.stats.fetch_failures
+                               ).astype(jnp.float32),
+                jnp.atleast_1d(s.stats.page_ins + s.stats.obj_ins
+                               + s.stats.fetch_failures
+                               ).astype(jnp.float32)]))
         self._probe = None              # in-flight traffic watermark read
         self._hprobe = None             # in-flight health probe read
-        self._hlast = np.zeros((2,), np.float64)
+        self._hlast = np.zeros((2, cfg.shards), np.float64)
+        self.shard_fail_frac = np.zeros((cfg.shards,), np.float64)
         self.breaker_open = False
         self._retryq: deque = deque()   # (obj_id, t0, attempt)
         self.counters = {"served": 0, "fetch_retries": 0, "shed_requests": 0,
@@ -578,11 +591,15 @@ class Engine:
                 return                  # poll on a later tick
         if cfg.dispatch != "sync" and not self._hprobe.is_ready():
             return
-        cur = np.asarray(jax.device_get(self._hprobe), np.float64)
+        cur = np.asarray(jax.device_get(self._hprobe),
+                         np.float64).reshape(2, -1)
         self._hprobe = None
-        d_fail = float(cur[0] - self._hlast[0])
-        d_att = float(cur[1] - self._hlast[1])
+        d = cur - self._hlast
         self._hlast = cur
+        d_fail, d_att = float(d[0].sum()), float(d[1].sum())
+        # per-shard window fractions: a single-shard outage lights up one
+        # column while the global fraction stays diluted by healthy shards
+        self.shard_fail_frac = d[0] / np.maximum(d[1], 1.0)
         if d_att <= 0:
             return                      # no fetch attempts -> no evidence
         frac = d_fail / d_att
@@ -705,9 +722,15 @@ class Engine:
         if self._robust:
             self.flush_retries()
         wall = max(time.time() - t_run0, 1e-9)
+        per_shard = None
         if self.scfg is not None:
             raw = shardplane.stats_total(self.state)
             pf = shardplane.paging_fraction(self.scfg, self.state)
+            # per-shard failure attribution: the plane already counts
+            # fetch_failures on the owner shard that performed the fetch,
+            # so a single-shard outage shows up on exactly one entry
+            per_shard = [int(x) for x in np.asarray(
+                jax.device_get(self.state.stats.fetch_failures))]
         else:
             raw = self.state.stats
             pf = plane_lib.paging_fraction(self.pcfg, self.state)
@@ -715,8 +738,11 @@ class Engine:
                  jax.device_get(raw)._asdict().items()}
         served = self.counters["served"]
         finished = served + self.counters["shed_requests"]
-        return {"latency": self.latency.summary(), "stats": stats,
-                "paging_fraction": float(pf),
-                "counters": dict(self.counters),
-                "goodput_rps": served / wall,
-                "throughput_rps": finished / wall}
+        report = {"latency": self.latency.summary(), "stats": stats,
+                  "paging_fraction": float(pf),
+                  "counters": dict(self.counters),
+                  "goodput_rps": served / wall,
+                  "throughput_rps": finished / wall}
+        if per_shard is not None:
+            report["fetch_failures_per_shard"] = per_shard
+        return report

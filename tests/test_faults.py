@@ -27,6 +27,7 @@ import pytest
 from repro.core import (PlaneConfig, baselines, check_invariants, create,
                         evacuate, faults, peek)
 from repro.core import batch as batch_lib
+from repro.core import expertplane
 from repro.core import shardplane
 from repro.core import state as state_lib
 from repro.runtime.orchestrator import FailureInjector
@@ -189,6 +190,70 @@ def test_faulted_update_writes_nothing():
     s = batch_lib.update(cfg, s, ids, new_rows)
     np.testing.assert_array_equal(np.asarray(peek(cfg, s, ids)),
                                   np.asarray(new_rows))
+
+
+# ---------------------------------------------------------------------------
+# expert plane under faults (plan-time masking, same discipline as kvplane)
+# ---------------------------------------------------------------------------
+
+def _mk_expert(faults_sched=None):
+    cfg = expertplane.ExpertPlaneConfig(
+        n_experts=32, d_model=8, d_ff=16, hot_slots=8, topk=2,
+        fetch_budget=4, dtype=jnp.float32, kernel_impl="ref",
+        faults=faults_sched)
+    key = jax.random.PRNGKey(17)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    slabs = (jax.random.normal(k1, (32, 8, 16), jnp.float32),
+             jax.random.normal(k2, (32, 8, 16), jnp.float32),
+             jax.random.normal(k3, (32, 16, 8), jnp.float32))
+    router = jax.random.normal(k4, (8, 32), jnp.float32)
+    return cfg, expertplane.init(cfg), router, slabs
+
+
+def test_expertplane_fault_masks_plan_no_slot_claimed():
+    """A faulted expert fetch drops out of the PLAN: it claims no slot and
+    displaces nothing (plan-time masking, not a partial execute)."""
+    sched = faults.Schedule(seed=2, fail_prob=1.0)   # every fetch faults
+    cfg, s, _, slabs = _mk_expert(sched)
+    needed = jnp.zeros((32,), bool).at[jnp.arange(4)].set(True)
+    plan = expertplane.plan_fetch(cfg, s, needed)
+    assert np.all(np.asarray(plan.expert) == -1), "faulted fetch kept"
+    s2 = expertplane.ensure_resident(cfg, s, needed, *slabs)
+    assert np.all(np.asarray(s2.slot_of) == -1), "faulted fetch claimed slot"
+    # null schedule is inert: the same plan with faults off fetches
+    cfg0, s0, _, _ = _mk_expert(faults.NULL)
+    plan0 = expertplane.plan_fetch(cfg0, s0, needed)
+    assert np.asarray(plan0.expert >= 0).sum() == 4
+
+
+def test_expertplane_batch_vs_reference_under_faults():
+    """Both fetch executors replay the identical fault-holed plan: decode
+    outputs and full state match bit-for-bit, while the schedule visibly
+    perturbs residency vs a fault-free twin."""
+    sched = faults.Schedule(seed=9, fail_prob=0.3)
+    cfg, s0, router, slabs = _mk_expert(sched)
+    cfg_ok, _, _, _ = _mk_expert(None)
+    sb = sr = sn = s0
+    key = jax.random.PRNGKey(3)
+    masked = False
+    for t in range(12):
+        key, kx = jax.random.split(key)
+        x = jax.random.normal(kx, (4, 8), jnp.float32)
+        yb, sb = expertplane.moe_decode(cfg, sb, router, x, *slabs,
+                                        mode="batch")
+        yr, sr = expertplane.moe_decode(cfg, sr, router, x, *slabs,
+                                        mode="reference")
+        _, sn = expertplane.moe_decode(cfg_ok, sn, router, x, *slabs,
+                                       mode="batch")
+        np.testing.assert_array_equal(np.asarray(yb), np.asarray(yr),
+                                      err_msg=f"decode step {t}")
+        masked = masked or not np.array_equal(np.asarray(sb.slot_of),
+                                              np.asarray(sn.slot_of))
+    for f in sb._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sb, f)), np.asarray(getattr(sr, f)),
+            err_msg=f"ExpertPlaneState.{f} diverged under faults")
+    assert masked, "fault schedule never masked an expert fetch"
 
 
 # ---------------------------------------------------------------------------

@@ -5,15 +5,20 @@ Two layers of bit-equivalence, mirroring the plan/execute discipline:
   * always-on (1 device): the vmapped sharded oracle serves ground-truth
     rows on random / skewed / sequential workloads, degenerates to the
     plain plane BITWISE (stats included) at ``shards=1``, spills + drains
-    overflow under a small exchange budget, and moves every shard's
-    governor threshold in lockstep.
+    overflow under a small exchange budget, moves every shard's governor
+    threshold in lockstep, and runs the overlap-pipelined exchange
+    bit-identically to the serial schedule (spill path and shard-targeted
+    outage windows included).
   * 8 simulated devices (CI job tier1-sharded, XLA_FLAGS=
     --xla_force_host_platform_device_count=8): the shard_map data path is
     bit-identical to the oracle — rows and full final state — for
     shards in {2, 4, 8}, including the spill path, update, the epoch
-    all_gather, evacuation, the kvplane sharded decode, and the serving
-    engine end to end.
+    all_gather, evacuation, the kvplane sharded decode, the serving
+    engine end to end, and the overlap suite (overlap == serial on
+    devices; the fused payloads cut the traced collective count from 3
+    to 2 per round).
 """
+import dataclasses
 import functools
 
 import jax
@@ -22,6 +27,7 @@ import numpy as np
 import pytest
 
 from repro.core import batch as batch_lib
+from repro.core import faults
 from repro.core import kvplane, plane as plane_lib, shardplane
 from repro.core import state as state_lib
 from repro.core.layout import PlaneConfig
@@ -232,9 +238,7 @@ def test_make_production_mesh_sizes_to_device_count():
 # --------------------------------------------------------------------------
 
 def _put_far(states, mesh):
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    return jax.device_put(states, jax.tree.map(
-        lambda _: NamedSharding(mesh, P("far")), states))
+    return mesh_lib.put_far(states, mesh)
 
 
 @needs8
@@ -319,6 +323,128 @@ def test_kvplane_shard_map_decode_bitwise(shards):
                                           np.asarray(o_dev),
                                           err_msg=f"decode t={t}")
     assert_trees_equal(s_emu, s_dev, "kv state")
+
+
+# --------------------------------------------------------------------------
+# overlap-pipelined exchange vs the serial schedule
+# --------------------------------------------------------------------------
+
+def _exchange_pair(shards, budget=3, pcfg=GCFG):
+    """Matched configs differing ONLY in the exchange schedule; the small
+    budget forces multiple (spilling) rounds through the pipeline."""
+    mk = lambda ex: shardplane.make_config(pcfg, shards, R,
+                                           per_shard_budget=budget,
+                                           exchange=ex)
+    return mk("overlap"), mk("serial")
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+def test_overlap_vs_serial_bitwise(shards):
+    """The pipelined schedule reorders collective *issue*, not values:
+    rows, served channel, final state and every stat match the serial
+    schedule bit-for-bit through spilling rounds, interleaved updates AND
+    a shard-targeted outage window (oracle backend) — and the outage's
+    failures stay attributed to the dead shard only."""
+    tgt = min(1, shards - 1)
+    # interleaved accesses+updates each bump the step clock, so the window
+    # spans the whole run to guarantee it covers a fetch-bearing access
+    sched = faults.Schedule(seed=7, outages=((1, 11, tgt),))
+    pcfg = dataclasses.replace(GCFG, faults=sched)
+    co, cs = _exchange_pair(shards, pcfg=pcfg)
+    assert co.rounds > 1                    # the fori steady state engages
+    data = initial_data()
+    so, ss = shardplane.create(co, data), shardplane.create(cs, data)
+    ao = shardplane.jitted_access(co, with_served=True)
+    a_s = shardplane.jitted_access(cs, with_served=True)
+    uo, us = shardplane.jitted_update(co), shardplane.jitted_update(cs)
+    rng = np.random.default_rng(61)
+    for t, ids in enumerate(workload("skewed", shards, steps=5, seed=61)):
+        jids = jnp.asarray(ids)
+        so, ro, svo = ao(so, jids)
+        ss, rs, svs = a_s(ss, jids)
+        np.testing.assert_array_equal(np.asarray(ro), np.asarray(rs),
+                                      err_msg=f"rows t={t}")
+        np.testing.assert_array_equal(np.asarray(svo), np.asarray(svs),
+                                      err_msg=f"served t={t}")
+        rows = rng.normal(size=(shards, R, D)).astype(np.float32)
+        so = uo(so, jids, jnp.asarray(rows))
+        ss = us(ss, jids, jnp.asarray(rows))
+    assert int(shardplane.stats_total(so).ingress_spills) > 0
+    per_shard = np.asarray(so.stats.fetch_failures).reshape(-1)
+    assert per_shard[tgt] > 0, "outage window never fired"
+    assert per_shard.sum() == per_shard[tgt], "outage leaked across shards"
+    assert_trees_equal(so, ss, f"overlap-vs-serial shards={shards}")
+
+
+@needs8
+def test_shard_map_overlap_vs_serial_bitwise():
+    """Overlap == serial on real (simulated) devices too, spill path
+    included — and each still matches its oracle (4-way agreement)."""
+    shards = 4
+    co, cs = _exchange_pair(shards)
+    mesh = mesh_lib.make_far_mesh(shards)
+    data = initial_data()
+    s_oracle = shardplane.create(co, data)
+    so, ss = _put_far(s_oracle, mesh), _put_far(s_oracle, mesh)
+    ao = shardplane.jitted_access(co, mesh=mesh, with_served=True)
+    a_s = shardplane.jitted_access(cs, mesh=mesh, with_served=True)
+    a_e = shardplane.jitted_access(co, with_served=True)
+    for t, ids in enumerate(workload("skewed", shards, steps=4, seed=71)):
+        jids = jnp.asarray(ids)
+        so, ro, svo = ao(so, jids)
+        ss, rs, svs = a_s(ss, jids)
+        s_oracle, re, sve = a_e(s_oracle, jids)
+        np.testing.assert_array_equal(np.asarray(ro), np.asarray(rs),
+                                      err_msg=f"rows t={t}")
+        np.testing.assert_array_equal(np.asarray(ro), np.asarray(re),
+                                      err_msg=f"oracle rows t={t}")
+        np.testing.assert_array_equal(np.asarray(svo), np.asarray(svs))
+    assert_trees_equal(so, ss, "shard_map overlap-vs-serial")
+    assert_trees_equal(so, s_oracle, "shard_map overlap vs oracle")
+    assert int(shardplane.stats_total(so).ingress_spills) > 0
+
+
+def _count_a2a(jaxpr):
+    """Recursively count all_to_all equations (sub-jaxprs included)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "all_to_all":
+            n += 1
+        for v in eqn.params.values():
+            for u in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(u, "jaxpr"):             # ClosedJaxpr
+                    n += _count_a2a(u.jaxpr)
+                elif hasattr(u, "eqns"):            # raw Jaxpr
+                    n += _count_a2a(u)
+    return n
+
+
+@needs8
+def test_overlap_halves_collectives_per_round():
+    """The fused payloads cut the exchange from 3 collectives per round
+    (ids, counts, rows) to 2 (fused ingress, fused egress) — verified on
+    the traced shard_map program, loop-free (rounds=1) and pipelined
+    (rounds=6: serial unrolls 3/round; overlap keeps 2 in the fori body
+    plus one ingress prologue + one egress epilogue)."""
+    shards = 4
+    mesh = mesh_lib.make_far_mesh(shards)
+    data = initial_data()
+
+    def count(budget, exchange):
+        scfg = shardplane.make_config(GCFG, shards, R,
+                                      per_shard_budget=budget,
+                                      exchange=exchange)
+        states = _put_far(shardplane.create(scfg, data), mesh)
+        ids = jnp.zeros((shards, R), jnp.int32)
+        fn = shardplane.jitted_access(scfg, mesh=mesh)
+        return _count_a2a(jax.make_jaxpr(fn)(states, ids).jaxpr)
+
+    assert count(None, "serial") == 3       # one round: ids + counts + rows
+    assert count(None, "overlap") == 2      # fused ingress + fused egress
+    rounds = shardplane.make_config(GCFG, shards, R,
+                                    per_shard_budget=3).rounds
+    assert count(3, "serial") == 3 * rounds
+    assert count(3, "overlap") == 4         # 2 steady-state + 2 pro/epilogue
 
 
 @needs8
