@@ -13,6 +13,12 @@ deterministic fault model of :mod:`repro.core.faults`:
     circuit breaker armed — the engine flips to degraded paging-local
     serving (hits only), keeps probing, and closes the breaker again
     after the window.
+  * ``hybrid/shard_outage_{base,shard,global}``: a SINGLE-shard outage
+    over a 2-shard far tier (DESIGN.md §6c).  With the per-shard breaker
+    (``breaker_scope="shard"``) only the dead shard trips — the healthy
+    shard's serves stay >= 0.9x the fault-free ``_base`` cell
+    (``healthy_shard_ratio``) — while the legacy ``"global"`` scope
+    degrades both shards on the same schedule.
 
 Each cell reports per-phase goodput (served requests / phase wall) and
 served fraction, the overall p99, and the chaos counters; the retry-on
@@ -39,14 +45,15 @@ from .common import emit, plane_config
 
 
 def _drive(plane: str, sched, steps: int, batch: int, pcfg, data, *,
-           max_retries: int = 0, breaker: bool = False):
+           max_retries: int = 0, breaker: bool = False, shards: int = 1,
+           breaker_scope: str = "shard"):
     """Run one engine through the 3-phase workload; returns per-phase
     (offered, served, wall_s) plus the report and chaos counters."""
     ecfg = EngineConfig(plane=plane, batch=batch, dispatch="sync",
-                        evac_every=16, faults=sched,
+                        evac_every=16, faults=sched, shards=shards,
                         max_retries=max_retries, watchdog_s=300.0,
                         breaker_threshold=0.5 if breaker else 0.0,
-                        breaker_probe_every=4)
+                        breaker_probe_every=4, breaker_scope=breaker_scope)
     eng = Engine(ecfg, pcfg, data)
     # offer batch-8 new requests per tick: the 8 free tail slots are where
     # queued retries re-enter, so recovery happens in-band, not only at
@@ -121,6 +128,26 @@ def run(quick: bool = False):
             rows[-1] = (name, us, derived + f";det={det}")
     cell("hybrid/outage_breaker", "hybrid", outage, max_retries=1,
          breaker=True)
+
+    # per-shard breaker (DESIGN.md §6c): a SINGLE-shard outage over a
+    # 2-shard far tier.  scope="shard" trips only shard 0 — shard 1 keeps
+    # the fast path and its serves stay >= 0.9x the fault-free baseline —
+    # while the legacy scope="global" drags every shard into degraded
+    # paging-local serving on the same schedule.
+    shard_outage = faults.Schedule(seed=11, outages=((window[0],
+                                                      window[1], 0),))
+    skw = dict(shards=2, max_retries=1, breaker=True)
+    base = cell("hybrid/shard_outage_base", "hybrid", faults.NULL, **skw)
+    for scope in ("shard", "global"):
+        eng = cell(f"hybrid/shard_outage_{scope}", "hybrid", shard_outage,
+                   breaker_scope=scope, **skw)
+        healthy = (eng.served_per_shard[1]
+                   / max(int(base.served_per_shard[1]), 1))
+        name, us, derived = rows[-1]
+        rows[-1] = (name, us, derived
+                    + f";healthy_shard_ratio={healthy:.3f}"
+                    + ";served_per_shard="
+                    + str([int(x) for x in eng.served_per_shard]))
 
     emit(rows)
     return rows

@@ -132,10 +132,14 @@ class AccessPlan(NamedTuple):
     pg_is_pf: jnp.ndarray   # [R+Q] bool: entry belongs to the prefetch section
     # Fault-model section (repro.core.faults).  With no (or a null)
     # schedule: served == (obj_ids >= 0), n_miss == n_pages + n_objs and
-    # n_failed == 0 — every consumer below reduces to the fault-free math.
+    # n_failed == n_egress == 0 — every consumer below reduces to the
+    # fault-free math.
     served: jnp.ndarray     # [R] bool: request's row is ground truth this tick
     n_miss: jnp.ndarray     # [] classified misses (pre-fault; stats basis)
     n_failed: jnp.ndarray   # [] planned fetches masked off by the fault model
+    n_egress: jnp.ndarray   # [] remote writes blocked by the fault model
+    #                         (eviction writebacks dropped at victim planning
+    #                         + remote update writes masked when for_update)
 
 
 def _prefetch_candidates(cfg: PlaneConfig, s: st.PlaneState,
@@ -212,9 +216,15 @@ def _plan_victims(cfg: PlaneConfig, s: st.PlaneState, req_v: jnp.ndarray,
 
 def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                 *, split_by_psf: bool = True, all_runtime: bool = False,
-                degraded: bool = False, shard=None) -> AccessPlan:
+                degraded=False, for_update: bool = False,
+                shard=None) -> AccessPlan:
     """Classify the batch and build the two ingress plans (plus the paging
     plan's prefetch section and victim assignment).
+
+    Shape contract: ``obj_ids`` is ``[R]`` int32 (negative = padded no-op
+    request); the returned :class:`AccessPlan` is the fixed-shape pytree
+    above, every field a function of ``(cfg, state, obj_ids)`` only.
+    Owned by DESIGN.md §3 (plan/execute split) and §6/§6c (fault masking).
 
     ``split_by_psf=False`` sends every miss down the paging plan (Fastswap
     baseline; its prefetch section skips the PSF mask — no PSF
@@ -228,9 +238,24 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     ``served=False``, and ``n_failed`` counts the masked fetches.  Because
     the mask is applied at *plan* time, a faulted fetch never moves a
     byte: no victim is paged out for it and no frame is partially
-    written.  ``degraded=True`` (the engine's circuit-breaker mode)
-    suppresses every remote fetch instead — the plane serves local hits
-    only, without charging ``fetch_failures``."""
+    written.
+
+    Egress faults apply the same plan-time discipline to remote *writes*
+    (DESIGN.md §6c): a scheduled page-in whose victim frame holds a page
+    that cannot be written back is dropped (fetch and victim to ``-1``,
+    demand drops counted in ``n_egress``) — the occupant stays local, the
+    requester still serves from the slab copy, nothing is lost.  With
+    ``for_update=True`` (the write path), requests predicted to remain
+    remote at execute time are additionally masked ``served=False`` when
+    their slab write would fault, so ``execute_update`` mutates neither
+    tier for them.
+
+    ``degraded`` (the engine's circuit-breaker mode) suppresses every
+    remote fetch instead — the plane serves local hits only, without
+    charging ``fetch_failures``.  It accepts a static Python bool (one
+    compiled program per mode) or a traced scalar bool (the sharded
+    per-shard breaker passes each shard its own flag through one shared
+    program); both produce bit-identical plans."""
     R = obj_ids.shape[0]
     Q = cfg.prefetch_budget
     # A negative id is a padded no-op request (the sharded exchange and any
@@ -285,8 +310,12 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     n_miss = n_pages + n_objs
     served = valid
     n_failed = jnp.zeros((), jnp.int32)
+    n_egress = jnp.zeros((), jnp.int32)
     fc = cfg.faults
-    if degraded:
+    tick = s.step + 1                        # the step this batch executes at
+    shard_i = 0 if shard is None else shard
+    static_deg = isinstance(degraded, bool)
+    if static_deg and degraded:
         # circuit-breaker mode: attempt no remote fetch at all (demand,
         # object or speculative) — local hits are the whole service
         page_plan = jnp.full((R,), -1, jnp.int32)
@@ -295,36 +324,81 @@ def plan_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
         n_objs = jnp.zeros((), jnp.int32)
         pf_plan = jnp.full((Q,), -1, jnp.int32)
         served = valid & local
-    elif fc is not None and fc.active:
-        tick = s.step + 1                    # the step this batch executes at
-        shard_i = 0 if shard is None else shard
-        # demand paging plan: faulted entries hole out to -1 (the
-        # executors' `fetch >= 0` masks drop holes without re-compaction)
-        failp = (page_plan >= 0) & fc.fetch_fail(tick, page_plan, shard_i)
-        n_failed_p = jnp.sum(failp.astype(jnp.int32))
-        page_plan = jnp.where(failp, -1, page_plan)
-        n_pages = n_pages - n_failed_p
-        # speculative fetches fault too, but silently (not a failure: no
-        # request depended on them)
-        failq = (pf_plan >= 0) & fc.fetch_fail(tick, pf_plan, shard_i)
-        pf_plan = jnp.where(failq, -1, pf_plan)
-        # runtime plan: mask, then RE-compact — _exec_runtime assigns
-        # append slots positionally (`t < n_move`), so holes are not allowed
-        v_obj = s.obj_loc[jnp.maximum(obj_plan, 0)] // cfg.page_objs
-        failo = (obj_plan >= 0) & fc.fetch_fail(tick, v_obj, shard_i)
-        n_failed_o = jnp.sum(failo.astype(jnp.int32))
-        keep = (obj_plan >= 0) & ~failo
-        obj_plan, n_objs = _compact(jnp.where(keep, obj_plan, -1), keep)
-        # a request is served unless its (remote) page's fetch faulted;
-        # capacity-capped and victim-starved requests still serve from the
-        # written-back slab copy (memory pressure, not a fault)
-        served = valid & (local | ~fc.fetch_fail(tick, v, shard_i))
-        n_failed = n_failed_p + n_failed_o
+        egress_on = False                    # no remote write can be planned
+    else:
+        if fc is not None and fc.active:
+            # demand paging plan: faulted entries hole out to -1 (the
+            # executors' `fetch >= 0` masks drop holes without re-compaction)
+            failp = (page_plan >= 0) & fc.fetch_fail(tick, page_plan, shard_i)
+            n_failed_p = jnp.sum(failp.astype(jnp.int32))
+            page_plan = jnp.where(failp, -1, page_plan)
+            n_pages = n_pages - n_failed_p
+            # speculative fetches fault too, but silently (not a failure: no
+            # request depended on them)
+            failq = (pf_plan >= 0) & fc.fetch_fail(tick, pf_plan, shard_i)
+            pf_plan = jnp.where(failq, -1, pf_plan)
+            # runtime plan: mask, then RE-compact — _exec_runtime assigns
+            # append slots positionally (`t < n_move`), so holes are not
+            # allowed
+            v_obj = s.obj_loc[jnp.maximum(obj_plan, 0)] // cfg.page_objs
+            failo = (obj_plan >= 0) & fc.fetch_fail(tick, v_obj, shard_i)
+            n_failed_o = jnp.sum(failo.astype(jnp.int32))
+            keep = (obj_plan >= 0) & ~failo
+            obj_plan, n_objs = _compact(jnp.where(keep, obj_plan, -1), keep)
+            # a request is served unless its (remote) page's fetch faulted;
+            # capacity-capped and victim-starved requests still serve from
+            # the written-back slab copy (memory pressure, not a fault)
+            served = valid & (local | ~fc.fetch_fail(tick, v, shard_i))
+            n_failed = n_failed_p + n_failed_o
+        if not static_deg:
+            # traced circuit-breaker flag (the sharded per-shard breaker):
+            # emulate the static degraded branch with where-overrides so one
+            # compiled program serves degraded and healthy shards alike,
+            # bit-identically to the static branch per shard
+            deg = jnp.asarray(degraded, bool)
+            page_plan = jnp.where(deg, -1, page_plan)
+            n_pages = jnp.where(deg, 0, n_pages)
+            obj_plan = jnp.where(deg, -1, obj_plan)
+            n_objs = jnp.where(deg, 0, n_objs)
+            pf_plan = jnp.where(deg, -1, pf_plan)
+            served = jnp.where(deg, valid & local, served)
+            n_failed = jnp.where(deg, 0, n_failed)
+        egress_on = fc is not None and fc.egress_active
     fetch = jnp.concatenate([page_plan, pf_plan])
     is_pf = jnp.concatenate([jnp.zeros((R,), bool), jnp.ones((Q,), bool)])
     fetch, victim = _plan_victims(cfg, s, v, fetch, is_pf)
+    if egress_on:
+        # egress side (DESIGN.md §6c): a scheduled page-in whose victim
+        # frame holds a page that cannot be written back this tick is
+        # dropped whole — the occupant stays local (no data loss), the
+        # requester still serves from the slab copy.  Keyed by the
+        # *occupant* vpage: the write that would fail is its writeback.
+        old_v = s.vpage_of[jnp.maximum(victim, 0)]
+        evicting = (victim >= 0) & (old_v >= 0)
+        efail = evicting & fc.egress_fail(tick, jnp.maximum(old_v, 0),
+                                          shard_i)
+        n_egress = jnp.sum((efail & ~is_pf).astype(jnp.int32))
+        fetch = jnp.where(efail, -1, fetch)
+        victim = jnp.where(efail, -1, victim)
+        if for_update:
+            # the write path: a request predicted to remain remote at
+            # execute time writes the slab — mask it unserved when that
+            # write would fault, so execute_update touches nothing for it
+            # (conservative prediction: extreme-pressure mid-batch
+            # evictions can only flip a predicted-local entry to an
+            # unmasked slab write, which stays correct, just unfaulted)
+            will_local = local | jnp.any(
+                (fetch[None, :] == v[:, None]) & (victim[None, :] >= 0),
+                axis=1)
+            moved = jnp.any((obj_plan[None, :] == obj_ids[:, None])
+                            & (obj_plan[None, :] >= 0), axis=1)
+            wfail = (served & ~will_local & ~moved
+                     & fc.egress_fail(tick, v, shard_i))
+            served = served & ~wfail
+            n_egress = n_egress + jnp.sum(wfail.astype(jnp.int32))
     return AccessPlan(v, page_plan, n_pages, obj_plan, n_objs,
-                      fetch, victim, is_pf, served, n_miss, n_failed)
+                      fetch, victim, is_pf, served, n_miss, n_failed,
+                      n_egress)
 
 
 # --------------------------------------------------------------------------
@@ -625,7 +699,14 @@ def _resolve(cfg: PlaneConfig, mode) -> bool:
 def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
                    plan: AccessPlan, *, mode: str | None = None):
     """Execute a precomputed ``AccessPlan``: both ingress paths, profiling,
-    final gather.  Returns ``(state, rows[R, D])``.
+    final gather.
+
+    Shape contract: ``obj_ids`` is ``[R]`` int32 (negative = padded no-op);
+    returns ``(state, rows[R, D])`` with zero rows for padded or unserved
+    requests.  Determinism invariant: ``mode="batch"`` and
+    ``mode="reference"`` replay the *same* plan and produce bit-identical
+    states and rows (tests/test_batch_equivalence.py), with or without an
+    active fault schedule — the plan already decided every byte that moves.
 
     This is the second half of ``access``; the serving engine dispatches
     ``plan_access`` and ``execute_access`` as separate device calls so the
@@ -636,7 +717,8 @@ def execute_access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     s = s._replace(step=s.step + 1)
     s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
                                  misses=plan.n_miss,
-                                 fetch_failures=plan.n_failed))
+                                 fetch_failures=plan.n_failed,
+                                 egress_failures=plan.n_egress))
     # pre-scope barrier analogue: refresh the recency of every target page
     # so mid-batch eviction prefers non-target pages (soft pin; the hard
     # deref-count pins stay host-side, see sync.py).  Unserved (faulted)
@@ -665,17 +747,21 @@ def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
 
 def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
            rows: jnp.ndarray, *, mode: str | None = None, shard=None,
-           degraded: bool = False) -> st.PlaneState:
+           degraded=False) -> st.PlaneState:
     """Batched write-through-local: fault in, overwrite rows (last write
     wins for duplicate ids), mark dirty.  An unserved (fault-masked)
     request writes nothing — neither tier mutates, so a retry later sees
-    the pre-fault value (no partial writes).
+    the pre-fault value (no partial writes).  ``for_update=True`` extends
+    that discipline to egress faults: a request whose row would have to be
+    written to the remote slab is masked unserved when that write would
+    fault (DESIGN.md §6c).
 
     The plan is built against pre-step state (``plan_access`` never reads
     ``s.step`` itself, so this matches the access path, where the serving
     engine plans one device call ahead of the step increment — keeps the
     fault-model tick stream identical across access and update)."""
-    plan = plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded)
+    plan = plan_access(cfg, s, obj_ids, shard=shard, degraded=degraded,
+                       for_update=True)
     return execute_update(cfg, s, obj_ids, rows, plan, mode=mode)
 
 
@@ -695,7 +781,8 @@ def execute_update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
     nv = jnp.sum(valid.astype(jnp.int32))
     s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
                                  misses=plan.n_miss,
-                                 fetch_failures=plan.n_failed))
+                                 fetch_failures=plan.n_failed,
+                                 egress_failures=plan.n_egress))
     served = plan.served
     pids = jnp.where(served, obj_ids, -1)
     s = s._replace(clock=s.clock.at[
@@ -809,7 +896,8 @@ def execute_paging_access(cfg: PlaneConfig, s: st.PlaneState,
     s = s._replace(step=s.step + 1)
     s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
                                  misses=plan.n_miss,
-                                 fetch_failures=plan.n_failed))
+                                 fetch_failures=plan.n_failed,
+                                 egress_failures=plan.n_egress))
     pids = jnp.where(plan.served, obj_ids, -1)
     # page-level recency only (no card profiling — that's the point)
     s = s._replace(clock=s.clock.at[
@@ -842,7 +930,8 @@ def execute_object_access(cfg: PlaneConfig, s: st.PlaneState,
     s = s._replace(step=s.step + 1)
     s = s._replace(stats=st.bump(s.stats, hits=nv - plan.n_miss,
                                  misses=plan.n_miss,
-                                 fetch_failures=plan.n_failed))
+                                 fetch_failures=plan.n_failed,
+                                 egress_failures=plan.n_egress))
     pids = jnp.where(plan.served, obj_ids, -1)
     s = s._replace(clock=s.clock.at[
         jnp.where(plan.served, plan.vpage, cfg.num_vpages)].set(s.step))

@@ -22,8 +22,18 @@ Fault classes:
     ``seq*num_pages+page`` in the KV plane) independently fails with
     ``fail_prob`` at a given tick, optionally only inside a
     ``fail_window`` of ticks (the fault-window benchmarks);
+  * transient egress failures — each remote *write* (eviction writeback,
+    runtime-path update of a remote object, evacuation victim, KV append)
+    independently fails with ``egress_prob``; the write is skipped
+    atomically at plan time so neither tier is ever partially mutated
+    (DESIGN.md §6c);
   * scheduled outages — ``(start, end, shard)`` windows during which a
-    shard's far tier is unreachable (``shard == -1`` means all shards);
+    shard's far tier is unreachable in *both* directions (fetches and
+    egress writes fail; ``shard == -1`` means all shards);
+  * slow-but-alive windows — ``(start, end, shard, slow_us)`` windows
+    during which a shard answers correctly but slowly; host-side extra
+    latency only, never a failure, so a slowdown must not trip the
+    circuit breaker (the slow ≠ dead distinction, DESIGN.md §6c);
   * latency spikes — host-side extra dispatch delay of ``spike_us`` with
     probability ``spike_prob`` per tick (the device model stays
     functional; variance is injected where wall time is actually
@@ -49,6 +59,9 @@ _TICK_MUL = 0x85EBCA6B
 _KEY_MUL = 0xC2B2AE35
 _SHARD_SALT = 0x01000193
 _SPIKE_KEY = 0x5A1AD  # reserved key: the host-side latency-spike stream
+# egress (remote-write) faults hash a different stream than fetch faults so
+# a page whose fetch fails is not doomed to also fail its writeback
+_EGRESS_SALT = 0x27D4EB2F
 
 
 def _mix(h, xp):
@@ -80,9 +93,19 @@ def _u01_raw(seed, tick, key, xp):
 class Schedule:
     """A deterministic fault schedule (frozen ⇒ hashable ⇒ jit-cache key).
 
-    The default instance is the null schedule: ``Schedule().active`` is
-    False and every fault predicate is constant-false, so wiring it in is
-    bit-identical to no fault model at all.
+    Owned by DESIGN.md §6 (fetch side) and §6c (egress side + slowdowns).
+
+    Determinism invariant: every predicate is a pure function of
+    ``(seed, tick, key, shard)`` — no RNG state — so the device methods
+    (:meth:`fetch_fail`, :meth:`egress_fail`, :meth:`in_outage`) and
+    their host mirrors (:meth:`fails`, :meth:`fails_egress`) agree
+    bitwise, and two same-seed runs fault identically regardless of
+    batch interleaving or dispatch mode.
+
+    The default instance is the null schedule: ``Schedule().active`` and
+    ``Schedule().egress_active`` are False and every fault predicate is
+    constant-false, so wiring it in is bit-identical to no fault model
+    at all.
     """
     seed: int = 0
     fail_prob: float = 0.0          # per-fetch transient failure probability
@@ -92,6 +115,10 @@ class Schedule:
     fail_at: tuple = ()             # ticks where the whole tier fails once
     spike_prob: float = 0.0         # per-tick latency-spike probability
     spike_us: float = 0.0           # extra dispatch latency when spiking
+    egress_prob: float = 0.0        # per-write transient failure probability
+    egress_window: tuple = ()       # (start, end): egress_prob only inside
+    slowdowns: tuple = ()           # ((start, end, shard, slow_us), ...):
+                                    # slow-but-alive windows, host-side only
 
     def __post_init__(self):
         # normalize to nested tuples so list-built schedules stay hashable
@@ -102,18 +129,37 @@ class Schedule:
                            tuple(int(t) for t in self.fail_at))
         object.__setattr__(self, "fail_window",
                            tuple(int(t) for t in self.fail_window))
+        object.__setattr__(self, "egress_window",
+                           tuple(int(t) for t in self.egress_window))
+        object.__setattr__(self, "slowdowns",
+                           tuple((int(w[0]), int(w[1]), int(w[2]),
+                                  float(w[3]))
+                                 for w in self.slowdowns))
         assert len(self.fail_window) in (0, 2), \
             "fail_window is a (start_tick, end_tick) pair"
+        assert len(self.egress_window) in (0, 2), \
+            "egress_window is a (start_tick, end_tick) pair"
         assert 0.0 <= self.fail_prob <= 1.0
         assert 0.0 <= self.spike_prob <= 1.0
+        assert 0.0 <= self.egress_prob <= 1.0
         assert all(len(w) == 3 for w in self.outages), \
             "outages are (start_tick, end_tick, shard) triples"
+        assert all(len(w) == 4 and w[3] >= 0.0 for w in self.slowdowns), \
+            "slowdowns are (start_tick, end_tick, shard, slow_us) 4-tuples"
 
     @property
     def active(self) -> bool:
-        """True if any device-side fault can ever fire (spikes are
-        host-side only and do not perturb the compiled plan)."""
+        """True if any device-side *fetch* fault can ever fire (spikes and
+        slowdowns are host-side only and do not perturb the compiled
+        plan)."""
         return bool(self.fail_prob > 0.0 or self.outages or self.fail_at)
+
+    @property
+    def egress_active(self) -> bool:
+        """True if any device-side *egress* (remote-write) fault can fire.
+        Outages and ``fail_at`` ticks kill writes as well as fetches — an
+        unreachable shard is unreachable in both directions."""
+        return bool(self.egress_prob > 0.0 or self.outages or self.fail_at)
 
     # ---------------------------------------------------------- device ----
     def in_outage(self, tick, shard):
@@ -150,6 +196,32 @@ class Schedule:
             fail = fail | jnp.any(at == jnp.asarray(tick, jnp.int32))
         return fail
 
+    def egress_fail(self, tick, keys, shard=0):
+        """Traced bool mask, shape of ``keys``: the remote *write* of each
+        key fails at ``tick``.  Callers apply it at plan time to whole
+        write units (a page writeback, an evacuation victim, a KV append)
+        so a faulted write mutates neither tier (DESIGN.md §6c).  The
+        stream is salted independently of :meth:`fetch_fail` — the same
+        (tick, key) can fail one direction and not the other."""
+        keys = jnp.asarray(keys)
+        fail = jnp.zeros(keys.shape, bool)
+        if self.egress_prob > 0.0:
+            salted = (keys.astype(jnp.uint32)
+                      ^ jnp.uint32(_EGRESS_SALT)) + (
+                          jnp.asarray(shard).astype(jnp.uint32)
+                          * jnp.uint32(_SHARD_SALT))
+            fail = _u01(self.seed, tick, salted, jnp) < self.egress_prob
+            if self.egress_window:
+                w0, w1 = self.egress_window
+                t = jnp.asarray(tick, jnp.int32)
+                fail = fail & (t >= w0) & (t < w1)
+        if self.outages:
+            fail = fail | self.in_outage(tick, shard)
+        if self.fail_at:
+            at = jnp.asarray(self.fail_at, jnp.int32)
+            fail = fail | jnp.any(at == jnp.asarray(tick, jnp.int32))
+        return fail
+
     # ------------------------------------------------------------ host ----
     def fails(self, tick: int, key: int = 0, shard: int = 0) -> bool:
         """Host mirror of :meth:`fetch_fail` for a single (tick, key)."""
@@ -167,6 +239,25 @@ class Schedule:
             return bool(_u01(self.seed, tick, salted, np) < self.fail_prob)
         return False
 
+    def fails_egress(self, tick: int, key: int = 0, shard: int = 0) -> bool:
+        """Host mirror of :meth:`egress_fail` for a single (tick, key)."""
+        if int(tick) in self.fail_at:
+            return True
+        for start, end, sh in self.outages:
+            if start <= int(tick) < end and (sh < 0 or sh == int(shard)):
+                return True
+        if self.egress_prob > 0.0:
+            if self.egress_window and not (
+                    self.egress_window[0] <= int(tick)
+                    < self.egress_window[1]):
+                return False
+            with np.errstate(over="ignore"):
+                salted = ((np.uint32(np.int64(key) & 0xFFFFFFFF)
+                           ^ np.uint32(_EGRESS_SALT))
+                          + np.uint32(shard) * np.uint32(_SHARD_SALT))
+            return bool(_u01(self.seed, tick, salted, np) < self.egress_prob)
+        return False
+
     def spike(self, tick: int) -> float:
         """Extra dispatch latency (us) injected at this tick; 0 if none."""
         if self.spike_prob <= 0.0:
@@ -174,6 +265,23 @@ class Schedule:
         if float(_u01(self.seed, tick, _SPIKE_KEY, np)) < self.spike_prob:
             return float(self.spike_us)
         return 0.0
+
+    def slow_us(self, tick: int, shard: int = -1) -> float:
+        """Extra latency (us) from slow-but-alive windows at this tick.
+
+        ``shard == -1`` asks for the worst case over all shards — the
+        right quantity for a collective exchange, where the slowest
+        participant gates the whole tick.  Slowdowns are pure latency:
+        they never appear in any failure predicate, so a slow shard must
+        not trip the circuit breaker (slow ≠ dead)."""
+        worst = 0.0
+        for start, end, sh, us in self.slowdowns:
+            if not (start <= int(tick) < end):
+                continue
+            if int(shard) >= 0 and sh >= 0 and sh != int(shard):
+                continue
+            worst = max(worst, us)
+        return worst
 
 
 NULL = Schedule()

@@ -776,7 +776,13 @@ def jitted_sharded_decode(cfg: KVPlaneConfig, mode: str | None = None,
 
 def append_sharded(cfg: KVPlaneConfig, states, k_new, v_new, lengths):
     """Append one token's KV (B=1) into the owning shard's slab page (+ the
-    frame copy if resident) and refresh that page's summaries."""
+    frame copy if resident) and refresh that page's summaries.
+
+    Egress faults (DESIGN.md §6c) gate the whole append atomically: when
+    the owning shard's remote write of page ``gpage`` faults at token tick
+    ``t``, ownership is masked off and NOTHING mutates — no slab row, no
+    kmax/kmin summary, no frame write-through — so the page summaries
+    never describe half-appended tokens."""
     D = states.step.shape[0]
     P, NP = cfg.page_tokens, cfg.num_pages
     t = lengths[0]
@@ -784,6 +790,10 @@ def append_sharded(cfg: KVPlaneConfig, states, k_new, v_new, lengths):
     slot = t % P
     shard_ids = jnp.arange(D)
     own = gpage // NP == shard_ids
+    fc = cfg.faults
+    if fc is not None and fc.egress_active:
+        own = own & ~fc.egress_fail(t, jnp.broadcast_to(gpage, (D,)),
+                                    shard_ids)
     lpage = (gpage % NP).astype(jnp.int32)
 
     def per_shard(st, is_owner):

@@ -41,17 +41,27 @@ from .layout import (CAR_THR_MAX, CAR_THR_MIN, FREE, LOCAL, REMOTE,
 
 def access(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray, *,
            mode: str | None = None):
-    """Batched hybrid access.  Returns ``(state, rows[R, D])``.
+    """Batched hybrid access (the read barrier; DESIGN.md §3).
 
-    ``mode`` is ``"batch"`` (vectorized engine, default) or ``"reference"``
-    (scalar oracle executing the identical plan); ``None`` defers to
-    ``cfg.access_mode``."""
+    Shape contract: ``obj_ids`` is ``[R]`` int32, negative ids are padded
+    no-ops; returns ``(state, rows[R, D])`` with zero rows for padded or
+    fault-unserved requests.  Determinism invariant: ``mode="batch"``
+    (vectorized engine, default) and ``mode="reference"`` (scalar oracle)
+    execute the identical plan and agree byte-for-byte on state and rows;
+    ``None`` defers to ``cfg.access_mode``."""
     return batch_lib.access(cfg, s, obj_ids, mode=mode)
 
 
 def update(cfg: PlaneConfig, s: st.PlaneState, obj_ids: jnp.ndarray,
            rows: jnp.ndarray, *, mode: str | None = None) -> st.PlaneState:
-    """Batched write-through-local: fault in, overwrite rows, mark dirty."""
+    """Batched write-through-local: fault in, overwrite rows, mark dirty
+    (DESIGN.md §3; fault masking §6/§6c).
+
+    Shape contract: ``obj_ids`` ``[R]`` int32 (negative = padded no-op),
+    ``rows`` ``[R, D]``; returns the new state.  Determinism invariant: a
+    fault-masked (unserved) request writes nothing to either tier — under
+    any same-seed schedule both access modes produce bit-identical
+    states."""
     return batch_lib.update(cfg, s, obj_ids, rows, mode=mode)
 
 
@@ -180,7 +190,9 @@ def advance_epoch(cfg: PlaneConfig, s: st.PlaneState, *,
 
     The card table is cleared to open the next window (``page_out``
     therefore blends the instantaneous window CAR with the EMA).  Pure
-    vectorized state math — identical under both access modes.
+    vectorized ``state -> state`` math — identical under both access
+    modes, bit-deterministic (no RNG, no data-dependent shapes).  Owned
+    by DESIGN.md §4a.
 
     ``traffic``: optional ``(d_page, d_obj)`` float32 byte totals overriding
     the locally-derived deltas — the sharded plane passes the GLOBAL
@@ -250,12 +262,18 @@ def plan_evacuate(cfg: PlaneConfig, s: st.PlaneState,
 
 def execute_evacuate(cfg: PlaneConfig, s: st.PlaneState, plan: EvacPlan,
                      garbage_threshold: float | None = None, *,
-                     clear_access: bool = True) -> st.PlaneState:
+                     clear_access: bool = True, shard=None) -> st.PlaneState:
     """Compact the planned victim pages (hot/cold segregation by access
     bit, ``kernels.compact`` page assembly).  Each victim's eligibility is
     re-checked against the *current* state — a stale plan entry (page
     evicted, drained, or pinned since planning) is skipped, so a plan may
     safely execute several dispatch gaps after it was made.
+
+    Egress faults (DESIGN.md §6c) gate each victim the same way: when
+    ``cfg.faults.egress_fail(s.step, vpage, shard)`` holds, the victim is
+    skipped whole this slice — no rows move, no page is freed, and
+    ``stats.egress_failures`` counts the blocked compaction.  The source
+    page stays live and eligible, so a later slice retries it.
 
     ``clear_access=False`` keeps the access bits (paper: the evacuator
     clears them "at the end of each evacuation" — for background slices
@@ -267,6 +285,8 @@ def execute_evacuate(cfg: PlaneConfig, s: st.PlaneState, plan: EvacPlan,
     D = cfg.obj_dim
     victims, victim_ok = plan.victims, plan.ok
     k = victims.shape[0]
+    fc = cfg.faults
+    shard_i = 0 if shard is None else shard
 
     def page_body(i, s):
         v = victims[i]
@@ -283,6 +303,14 @@ def execute_evacuate(cfg: PlaneConfig, s: st.PlaneState, plan: EvacPlan,
             & (allocated > 0)
             & (garbage_ratio > thr)
         )
+        if fc is not None and fc.egress_active:
+            # an evacuation moves rows into (possibly fresh) remote-backed
+            # log pages — a blocked write skips the victim atomically
+            efail = fc.egress_fail(s.step, v, shard_i)
+            s = s._replace(stats=st.bump(
+                s.stats,
+                egress_failures=(selected & efail).astype(jnp.int32)))
+            selected = selected & ~efail
 
         def evacuate_page(s):
             # pin the source so destination allocation can't page it out
@@ -363,7 +391,7 @@ def execute_evacuate(cfg: PlaneConfig, s: st.PlaneState, plan: EvacPlan,
 def evacuate(cfg: PlaneConfig, s: st.PlaneState,
              garbage_threshold: float | None = None,
              max_pages: int = 16, *,
-             clear_access: bool = True) -> st.PlaneState:
+             clear_access: bool = True, shard=None) -> st.PlaneState:
     """Foreground evacuation: plan + execute in one call.
 
     Live objects are segregated by their access bit: recently-accessed
@@ -382,10 +410,17 @@ def evacuate(cfg: PlaneConfig, s: st.PlaneState,
     goes further and schedules ``plan_evacuate``/``execute_evacuate`` as
     small background slices inside pipeline bubbles (``evac_budget``) —
     this wrapper is the blocking-foreground composition of the same two
-    halves."""
+    halves.
+
+    Shape contract: pure ``state -> state`` (fixed ``[max_pages]`` victim
+    plan).  Determinism invariant: victim selection and the egress-fault
+    gate (§6c) are functions of state and ``cfg.faults`` only — same-seed
+    runs compact identical pages.  Owned by DESIGN.md §4c (slice
+    scheduling) and §6c (egress faults); ``shard`` keys the per-shard
+    fault stream for the sharded plane."""
     plan = plan_evacuate(cfg, s, garbage_threshold, max_pages)
     return execute_evacuate(cfg, s, plan, garbage_threshold,
-                            clear_access=clear_access)
+                            clear_access=clear_access, shard=shard)
 
 
 # --------------------------------------------------------------------------

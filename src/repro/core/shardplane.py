@@ -267,7 +267,8 @@ def _serve_update_round(cfg: ShardedPlaneConfig, s, recv, recv_cnt, payload,
     S, B, D = cfg.shards, cfg.per_shard_budget, cfg.shard.obj_dim
     ok = recv >= 0
     lids = jnp.where(ok, recv - me * cfg.shard.num_objs, -1).reshape(S * B)
-    plan = batch_lib.plan_access(cfg.shard, s, lids, shard=me)
+    plan = batch_lib.plan_access(cfg.shard, s, lids, shard=me,
+                                 for_update=True)
     s = batch_lib.execute_update(cfg.shard, s, lids,
                                  payload.reshape(S * B, D), plan, mode=mode)
     extra = jnp.sum(jnp.where(ok, recv_cnt - 1, 0)).astype(jnp.int32)
@@ -423,22 +424,38 @@ def _sched_update(cfg: ShardedPlaneConfig, states, ids, rows, *, pack,
 # --------------------------------------------------------------------------
 
 def access(cfg: ShardedPlaneConfig, states, ids, *, mode=None,
-           degraded: bool = False, with_served: bool = False):
+           degraded=False, with_served: bool = False):
     """Sharded access on ONE device (the bit-equivalence oracle).
 
-    ``states``: stacked ``[S, ...]`` plane; ``ids [S, R]`` global object
-    ids per source shard (< 0 = padding).  Returns ``(states,
-    rows [S, R, D])`` in request order — plus a ``served [S, R]`` bool
-    when ``with_served`` (fault-model verdicts riding the exchange back
-    to the requesters; padding is never served)."""
+    Shape contract: ``states`` is the stacked ``[S, ...]`` plane; ``ids
+    [S, R]`` global object ids per source shard (< 0 = padding).  Returns
+    ``(states, rows [S, R, D])`` in request order — plus a ``served
+    [S, R]`` bool when ``with_served`` (fault-model verdicts riding the
+    exchange back to the requesters; padding is never served).
+
+    ``degraded`` is a static bool (all shards degraded, the legacy global
+    breaker) or a traced ``[S]`` bool mask — the per-shard breaker
+    (DESIGN.md §6c): a masked shard plans no remote I/O and serves local
+    hits only, while unmasked shards run the full fast path
+    bit-identically to their all-healthy oracle (shard planes are
+    independent; only the masked shard's plan changes).  Determinism
+    invariant: the vmap oracle and the shard_map path execute the same
+    per-shard op sequence and agree bitwise (DESIGN.md §5)."""
     S = cfg.shards
     me = jnp.arange(S, dtype=jnp.int32)
-    serve_v = jax.vmap(partial(_serve_round, cfg, mode=mode,
-                               degraded=degraded))
+    if isinstance(degraded, bool):
+        serve_v = jax.vmap(partial(_serve_round, cfg, mode=mode,
+                                   degraded=degraded))
+        serve = lambda st_, recv, cnt: serve_v(st_, recv, cnt, me)
+    else:
+        deg = jnp.asarray(degraded).astype(bool)
+        serve_v = jax.vmap(lambda s_, r, c, m, d: _serve_round(
+            cfg, s_, r, c, m, mode=mode, degraded=d))
+        serve = lambda st_, recv, cnt: serve_v(st_, recv, cnt, me, deg)
     states, out, out_sv = _sched_access(
         cfg, states, ids,
         pack=jax.vmap(partial(_pack_round, cfg)),
-        serve=lambda st_, recv, cnt: serve_v(st_, recv, cnt, me),
+        serve=serve,
         collect=jax.vmap(partial(_collect_round, cfg)),
         collect_sv=jax.vmap(partial(_collect_served, cfg)),
         # the emulated all_to_all: [S(src), S(dst), ...] -> [S(dst), S(src), ...]
@@ -475,11 +492,15 @@ def advance_epoch(cfg: ShardedPlaneConfig, states):
 def evacuate(cfg: ShardedPlaneConfig, states, garbage_threshold=None,
              max_pages: int = 16, *, clear_access: bool = True):
     """Per-shard compaction (no cross-shard traffic: objects re-pack onto
-    their owner's own fill pages)."""
-    return jax.vmap(partial(plane_lib.evacuate, cfg.shard,
-                            garbage_threshold=garbage_threshold,
-                            max_pages=max_pages,
-                            clear_access=clear_access))(states)
+    their owner's own fill pages).  Each shard keys the fault model's
+    per-shard egress stream with its own index, matching the shard_map
+    path's ``lax.axis_index`` bit-for-bit."""
+    S = cfg.shards
+    me = jnp.arange(S, dtype=jnp.int32)
+    return jax.vmap(lambda s_, m: plane_lib.evacuate(
+        cfg.shard, s_, garbage_threshold=garbage_threshold,
+        max_pages=max_pages, clear_access=clear_access,
+        shard=m))(states, me)
 
 
 # --------------------------------------------------------------------------
@@ -500,6 +521,30 @@ def _access_body(cfg: ShardedPlaneConfig, mode, degraded, with_served,
         pack=partial(_pack_round, cfg),
         serve=lambda st_, recv, cnt: _serve_round(
             cfg, st_, recv, cnt, me, mode=mode, degraded=degraded),
+        collect=partial(_collect_round, cfg),
+        collect_sv=partial(_collect_served, cfg),
+        a2a=_a2a, with_served=with_served)
+    s = jax.tree.map(lambda x: x[None], s)
+    if with_served:
+        return s, out[None], out_sv[None]
+    return s, out[None]
+
+
+def _access_body_degmask(cfg: ShardedPlaneConfig, mode, with_served,
+                         states, ids, deg):
+    """The per-shard-breaker access body: like ``_access_body`` but the
+    degraded flag arrives as data (``deg [S] bool``, one entry per shard)
+    instead of baking a static mode into the program — one compiled
+    executable serves any mix of tripped and healthy shards."""
+    s = jax.tree.map(lambda x: x[0], states)
+    ids = ids[0]
+    d = deg[0]
+    me = lax.axis_index("far").astype(jnp.int32)
+    s, out, out_sv = _sched_access(
+        cfg, s, ids,
+        pack=partial(_pack_round, cfg),
+        serve=lambda st_, recv, cnt: _serve_round(
+            cfg, st_, recv, cnt, me, mode=mode, degraded=d),
         collect=partial(_collect_round, cfg),
         collect_sv=partial(_collect_served, cfg),
         a2a=_a2a, with_served=with_served)
@@ -536,8 +581,10 @@ def _epoch_body(cfg: ShardedPlaneConfig, states):
 def _evac_body(cfg: ShardedPlaneConfig, garbage_threshold, max_pages,
                clear_access, states):
     s = jax.tree.map(lambda x: x[0], states)
+    me = lax.axis_index("far").astype(jnp.int32)
     s = plane_lib.evacuate(cfg.shard, s, garbage_threshold=garbage_threshold,
-                           max_pages=max_pages, clear_access=clear_access)
+                           max_pages=max_pages, clear_access=clear_access,
+                           shard=me)
     return jax.tree.map(lambda x: x[None], s)
 
 
@@ -607,6 +654,33 @@ def jitted_access(cfg: ShardedPlaneConfig, mode=None, mesh=None, *,
     circuit-breaker variant."""
     return _jitted_access(cfg, mode or cfg.shard.access_mode, mesh,
                           with_served, degraded)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_access_degmask(cfg: ShardedPlaneConfig, mode, mesh, with_served):
+    if mesh is None:
+        def oracle(states, ids, deg):
+            return access(cfg, states, ids, mode=mode, degraded=deg,
+                          with_served=with_served)
+        return jax.jit(oracle)
+    sp = _state_specs(cfg)
+    outs = ((sp, P("far"), P("far")) if with_served else (sp, P("far")))
+    fn = shard_map(partial(_access_body_degmask, cfg, mode, with_served),
+                   mesh=mesh, in_specs=(sp, P("far"), P("far")),
+                   out_specs=outs, check_rep=False)
+    return jax.jit(fn)
+
+
+def jitted_access_degmask(cfg: ShardedPlaneConfig, mode=None, mesh=None, *,
+                          with_served: bool = True):
+    """``(states, ids [S, R], deg [S] bool) -> (states, rows, served?)``:
+    the per-shard circuit-breaker entry point (DESIGN.md §6c).  Shards
+    with ``deg[k]`` set serve local hits only (no remote I/O planned);
+    the rest run the full fast path, bit-identically to the plain
+    ``jitted_access`` program — passing an all-False mask reproduces it
+    exactly, so the engine compiles ONE program for every breaker state."""
+    return _jitted_access_degmask(cfg, mode or cfg.shard.access_mode, mesh,
+                                  with_served)
 
 
 @functools.lru_cache(maxsize=None)

@@ -36,6 +36,10 @@ class PlaneStats(NamedTuple):
     fetch_failures: jnp.ndarray  # planned fetches masked off by the fault
     #                              model (repro.core.faults) — each left its
     #                              request unserved this tick
+    egress_failures: jnp.ndarray # remote writes (eviction writeback, remote
+    #                              update, evacuation victim, KV append)
+    #                              blocked by the fault model — the write was
+    #                              skipped atomically, neither tier mutated
 
     @classmethod
     def zeros(cls) -> "PlaneStats":

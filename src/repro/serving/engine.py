@@ -38,11 +38,18 @@ and the engine closes the loop host-side:
 * **watchdog** — ``_retire_one`` polls with a deadline instead of
   blocking forever, so a wedged device call raises instead of hanging;
 * **circuit breaker** — an async health probe (the same ``is_ready()``
-  pattern as the epoch watermark) tracks the fetch-failure fraction; past
-  ``breaker_threshold`` the engine flips to **degraded paging-local
-  serving** (local hits only, no remote fetches, no victim writes) and
-  keeps probing the far tier on every ``breaker_probe_every``-th tick,
-  closing again with hysteresis once probes come back healthy.
+  pattern as the epoch watermark) tracks the fetch-failure fraction PER
+  SHARD (``[2, shards]`` cumulative counters); a shard whose windowed
+  fraction reaches ``breaker_threshold`` trips *alone*
+  (``breaker_scope="shard"``, the default — DESIGN.md §6c): its requests
+  degrade to paging-local serving (local hits only, no remote fetches, no
+  victim writes) while healthy shards stay on the full fast path,
+  bit-identically to an all-healthy run.  Every
+  ``breaker_probe_every``-th tick dispatches tripped shards normally to
+  probe far-tier health, and each shard closes again with hysteresis once
+  its own probes come back healthy.  ``breaker_scope="global"`` keeps the
+  legacy engine-wide decision (one summed fraction trips every shard at
+  once) for comparison.
 
 ``run`` then reports **goodput** (requests actually served) separately
 from raw throughput (served + shed) — the split the fault-window
@@ -149,6 +156,13 @@ class EngineConfig:
     breaker_threshold: float = 0.0
     breaker_probe_every: int = 4
     breaker_hysteresis: float = 0.5
+    # "shard" (default): each shard trips and recovers on its OWN windowed
+    # failure fraction — a single sick shard degrades alone while healthy
+    # shards keep the fast path (their ids masked per shard at plan time
+    # via the traced degraded mask, DESIGN.md §6c).  "global": the legacy
+    # engine-wide decision on the summed fraction (all shards degrade
+    # together).  With shards=1 the two are identical.
+    breaker_scope: str = "shard"
 
 
 class LatencyTracker:
@@ -255,7 +269,7 @@ class Engine:
         self._plan = self._exec = self._access = None
         self._evac = self._epoch = self._traffic = None
         self._evac_slice = self._evac_slice_clear = None
-        self._plan_deg = self._access_deg = self._health = None
+        self._plan_deg = self._access_degmask = self._health = None
         if sharded:
             assert cfg.batch % cfg.shards == 0, (
                 f"batch={cfg.batch} must split evenly over "
@@ -275,8 +289,12 @@ class Engine:
             self._access = shardplane.jitted_access(
                 scfg, cfg.mode, mesh, with_served=self._robust)
             if breaker_on:
-                self._access_deg = shardplane.jitted_access(
-                    scfg, cfg.mode, mesh, with_served=True, degraded=True)
+                # ONE compiled program for every breaker state: the [S]
+                # degraded mask arrives as data, so any mix of tripped and
+                # healthy shards dispatches without recompiling (all-False
+                # reproduces the plain program bit-identically)
+                self._access_degmask = shardplane.jitted_access_degmask(
+                    scfg, cfg.mode, mesh, with_served=True)
             if cfg.plane == "hybrid":
                 self._evac = shardplane.jitted_evacuate(scfg, mesh=mesh)
                 if cfg.evac_budget > 0:
@@ -348,11 +366,10 @@ class Engine:
             # "shard").  Attempts = successful ingress + failures, so
             # degraded ticks (which fetch nothing) contribute ~nothing to
             # either side and a window's fraction measures exactly its
-            # *probe* tick's health — the breaker can close off one good
-            # probe.  The per-shard columns make a single-shard outage
-            # attributable (``shard_fail_frac``) — the prerequisite for a
-            # per-shard breaker; the trip decision itself stays
-            # engine-global (summed over shards, exactly the old signal).
+            # *probe* tick's health — a shard's breaker can close off one
+            # good probe.  The per-shard columns drive the per-shard trip
+            # decision (``breaker_scope="shard"``); ``"global"`` sums them
+            # back into the legacy engine-wide signal.
             self._health = jax.jit(lambda s: jnp.stack([
                 jnp.atleast_1d(s.stats.fetch_failures
                                ).astype(jnp.float32),
@@ -363,7 +380,8 @@ class Engine:
         self._hprobe = None             # in-flight health probe read
         self._hlast = np.zeros((2, cfg.shards), np.float64)
         self.shard_fail_frac = np.zeros((cfg.shards,), np.float64)
-        self.breaker_open = False
+        self.breaker_open_shards = np.zeros((cfg.shards,), bool)
+        self.served_per_shard = np.zeros((cfg.shards,), np.int64)
         self._retryq: deque = deque()   # (obj_id, t0, attempt)
         self.counters = {"served": 0, "fetch_retries": 0, "shed_requests": 0,
                          "deadline_misses": 0, "degraded_ticks": 0,
@@ -399,14 +417,22 @@ class Engine:
         # engine's (the fault-free equivalence tests depend on it).
         if self._plan_deg is not None:
             jax.block_until_ready(self._plan_deg(self.state, warm))
-        if self._access_deg is not None:
-            jax.block_until_ready(self._access_deg(self.state, warm))
+        if self._access_degmask is not None:
+            jax.block_until_ready(self._access_degmask(
+                self.state, warm, jnp.zeros((cfg.shards,), bool)))
         if self._health is not None:
             jax.block_until_ready(self._health(self.state))
         self.state = self.state._replace(
             stats=jax.tree.map(jnp.zeros_like, self.state.stats),
             epoch_page_ins=jnp.zeros_like(self.state.epoch_page_ins),
             epoch_obj_ins=jnp.zeros_like(self.state.epoch_obj_ins))
+
+    @property
+    def breaker_open(self) -> bool:
+        """True if ANY shard's breaker is open (back-compat view of the
+        per-shard ``breaker_open_shards`` array; with shards=1 it is
+        exactly the old engine-global flag)."""
+        return bool(self.breaker_open_shards.any())
 
     # -- pipelined dispatch -------------------------------------------------
 
@@ -502,20 +528,34 @@ class Engine:
             d_us = sched.spike(tick)
             if d_us > 0.0:
                 time.sleep(d_us * 1e-6)
-        degraded = False
-        if self._health is not None and self.breaker_open:
-            degraded = tick % cfg.breaker_probe_every != 0
-            if degraded:
-                self.counters["degraded_ticks"] += 1
+            # slow-but-alive shard windows: the exchange is collective, so
+            # the slowest participating shard gates the whole tick.  Pure
+            # latency — it never feeds the failure counters, so a slow
+            # shard must NOT trip the breaker (slow != dead, §6c).
+            slow = sched.slow_us(tick)
+            if slow > 0.0:
+                time.sleep(slow * 1e-6)
+        # per-shard degraded mask for this tick: tripped shards serve
+        # paging-local except on probe ticks, healthy shards always run
+        # the fast path (with shards=1 this is the old global flag)
+        dmask = np.zeros((cfg.shards,), bool)
+        if (self._health is not None and self.breaker_open
+                and tick % cfg.breaker_probe_every != 0):
+            dmask = self.breaker_open_shards.copy()
+            self.counters["degraded_ticks"] += int(dmask.sum())
         ids = jnp.asarray(full)
         if self._access is not None:
             S, R = cfg.shards, cfg.batch // cfg.shards
-            fn = self._access_deg if degraded else self._access
-            self.state, out, sv = fn(self.state, ids.reshape(S, R))
+            if self._access_degmask is not None:
+                self.state, out, sv = self._access_degmask(
+                    self.state, ids.reshape(S, R), jnp.asarray(dmask))
+            else:
+                self.state, out, sv = self._access(self.state,
+                                                   ids.reshape(S, R))
             rows_full = out.reshape(cfg.batch, -1)
             served = sv.reshape(cfg.batch)
         else:
-            plan = (self._plan_deg if degraded else self._plan)(
+            plan = (self._plan_deg if dmask[0] else self._plan)(
                 self.state, ids)
             self.state, rows_full = self._exec(self.state, ids, plan)
             served = plan.served
@@ -580,10 +620,17 @@ class Engine:
         """Async circuit-breaker update — same non-blocking shape as
         ``_epoch_due``: start a cumulative (failures, attempts) probe,
         poll it with ``is_ready()`` on later ticks, and act on the delta
-        since the previous reading.  Open at ``breaker_threshold``; close
-        only once a window reads back at threshold * hysteresis (while
-        open, only probe ticks attempt fetches, so the window's fraction
-        is exactly the probes' health)."""
+        since the previous reading.
+
+        ``breaker_scope="shard"`` (default): each shard column trips and
+        closes on its OWN windowed failure fraction — a shard only acts
+        when its window holds evidence (attempts > 0), opens at
+        ``breaker_threshold`` and closes once a window reads back at
+        threshold * hysteresis (while open, only probe ticks attempt
+        fetches, so the window's fraction is exactly that shard's probes'
+        health).  ``"global"``: the legacy decision on the summed
+        fractions, all shards together.  ``breaker_trips`` counts
+        per-shard openings (engine-wide trips with shards=1)."""
         cfg = self.cfg
         if self._hprobe is None:
             self._hprobe = self._health(self.state)
@@ -596,19 +643,31 @@ class Engine:
         self._hprobe = None
         d = cur - self._hlast
         self._hlast = cur
-        d_fail, d_att = float(d[0].sum()), float(d[1].sum())
         # per-shard window fractions: a single-shard outage lights up one
         # column while the global fraction stays diluted by healthy shards
         self.shard_fail_frac = d[0] / np.maximum(d[1], 1.0)
-        if d_att <= 0:
-            return                      # no fetch attempts -> no evidence
-        frac = d_fail / d_att
-        if not self.breaker_open and frac >= cfg.breaker_threshold:
-            self.breaker_open = True
-            self.counters["breaker_trips"] += 1
-        elif (self.breaker_open
-              and frac <= cfg.breaker_threshold * cfg.breaker_hysteresis):
-            self.breaker_open = False
+        thr, hys = cfg.breaker_threshold, cfg.breaker_hysteresis
+        if cfg.breaker_scope == "global":
+            d_fail, d_att = float(d[0].sum()), float(d[1].sum())
+            if d_att <= 0:
+                return                  # no fetch attempts -> no evidence
+            frac = d_fail / d_att
+            if not self.breaker_open and frac >= thr:
+                self.breaker_open_shards[:] = True
+                self.counters["breaker_trips"] += 1
+            elif self.breaker_open and frac <= thr * hys:
+                self.breaker_open_shards[:] = False
+            return
+        # per-shard: evidence, trip and recovery are all column-local
+        evidence = d[1] > 0
+        frac = d[0] / np.maximum(d[1], 1.0)
+        opening = evidence & ~self.breaker_open_shards & (frac >= thr)
+        if opening.any():
+            self.breaker_open_shards |= opening
+            self.counters["breaker_trips"] += int(opening.sum())
+        closing = (evidence & self.breaker_open_shards
+                   & (frac <= thr * hys))
+        self.breaker_open_shards &= ~closing
 
     def _wait_ready(self, rows):
         """Block on a device result, with a watchdog: a wedged device call
@@ -644,6 +703,11 @@ class Engine:
             lat = (now - e.t0s[ok]) * 1e6
             self.latency.record_us(lat)
             self.counters["served"] += int(ok.sum())
+            if self.scfg is not None:
+                # attribute serves to the owner shard so per-shard
+                # breaker benchmarks can read healthy-shard goodput
+                owners = e.ids[ok] // self.scfg.shard.num_objs
+                np.add.at(self.served_per_shard, owners, 1)
             if cfg.deadline_us > 0:
                 self.counters["deadline_misses"] += int(
                     (lat > cfg.deadline_us).sum())
@@ -745,4 +809,11 @@ class Engine:
                   "throughput_rps": finished / wall}
         if per_shard is not None:
             report["fetch_failures_per_shard"] = per_shard
+            # egress (writeback) failures land on the shard whose slab the
+            # write targeted — the breaker never reads these (fetch-only),
+            # so a write-side brownout is visible here even if no trip fires
+            report["egress_failures_per_shard"] = [int(x) for x in np.asarray(
+                jax.device_get(self.state.stats.egress_failures))]
+            report["served_per_shard"] = [int(x)
+                                          for x in self.served_per_shard]
         return report

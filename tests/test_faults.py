@@ -15,7 +15,13 @@ Covers the four layers the fault schedule threads through:
   * the serving engine — fault-free robust engine bit-identical to the
     plain one, retries that converge, deadline shedding, the circuit
     breaker tripping into degraded paging-local mode and recovering,
-    bounded latency-tracker memory, and counter determinism.
+    bounded latency-tracker memory, and counter determinism;
+  * egress faults + the per-shard breaker (DESIGN.md §6c) — remote-WRITE
+    failures (eviction writeback, update slab writes, evacuation moves,
+    KV appends) masked at plan time so neither tier ever sees a partial
+    write, slow-but-alive windows that add latency without feeding the
+    breaker, and the per-shard breaker isolating a single-shard outage
+    while healthy shards keep serving the fast path bit-identically.
 """
 import time
 
@@ -538,3 +544,302 @@ def _trips(inj, step):
         return False
     except RuntimeError:
         return True
+
+
+# ---------------------------------------------------------------------------
+# egress faults (remote-WRITE failures, DESIGN.md §6c)
+# ---------------------------------------------------------------------------
+
+def test_schedule_egress_host_device_agreement():
+    sched = faults.Schedule(seed=11, egress_prob=0.3, egress_window=(2, 9),
+                            outages=((5, 8, 1),), fail_at=(12,))
+    keys = np.arange(64, dtype=np.int32)
+    for tick in [1, 3, 5, 7, 9, 12, 20]:
+        for shard in [0, 1]:
+            dev = np.asarray(sched.egress_fail(tick, jnp.asarray(keys),
+                                               shard))
+            host = np.array([sched.fails_egress(tick, int(k), shard)
+                             for k in keys])
+            np.testing.assert_array_equal(dev, host,
+                                          err_msg=f"tick={tick} sh={shard}")
+
+
+def test_schedule_egress_stream_independent_of_fetch():
+    """The egress salt decorrelates write faults from read faults: a seed
+    that loses a fetch need not lose the writeback of the same key."""
+    sched = faults.Schedule(seed=5, fail_prob=0.3, egress_prob=0.3)
+    keys = jnp.arange(512)
+    assert any(not jnp.array_equal(sched.fetch_fail(t, keys),
+                                   sched.egress_fail(t, keys))
+               for t in range(4)), "egress stream mirrors the fetch stream"
+    # outages and fail_at kill BOTH directions (a dead shard can't write)
+    out = faults.Schedule(seed=5, outages=((3, 6, -1),))
+    assert bool(np.asarray(out.egress_fail(4, jnp.asarray([7]))).all())
+    assert out.egress_active and not faults.NULL.egress_active
+
+
+def test_schedule_slowdowns_latency_only():
+    """Slow-but-alive windows are pure latency: they never appear in any
+    failure predicate (slow != dead — the breaker must not trip)."""
+    sched = faults.Schedule(seed=3, slowdowns=((4, 8, 1, 250.0),
+                                               (6, 10, -1, 100.0)))
+    assert not sched.active and not sched.egress_active
+    assert sched.slow_us(2) == 0.0
+    assert sched.slow_us(5, shard=1) == 250.0
+    assert sched.slow_us(5, shard=0) == 0.0        # window targets shard 1
+    assert sched.slow_us(7) == 250.0               # worst over all shards
+    assert sched.slow_us(9) == 100.0
+    keys = jnp.arange(32)
+    for t in range(12):
+        assert not np.asarray(sched.fetch_fail(t, keys)).any()
+        assert not np.asarray(sched.egress_fail(t, keys)).any()
+
+
+def test_egress_chaos_soak_invariants_and_determinism():
+    """Mixed access/update/evacuate with BOTH fault directions armed:
+    structural invariants hold at every step and the trajectory is a pure
+    function of the seed (acceptance: same-seed chaos counters are
+    bit-identical)."""
+    sched = faults.Schedule(seed=9, fail_prob=0.15, egress_prob=0.25,
+                            outages=((6, 10, -1),))
+
+    def soak():
+        cfg, data, s = mk(faults=sched)
+        rng = np.random.RandomState(1)
+        for i in range(24):
+            ids = jnp.asarray(rng.randint(0, 96, size=16), jnp.int32)
+            op = i % 3
+            if op == 0:
+                s, _ = batch_lib.access(cfg, s, ids)
+            elif op == 1:
+                rows = jnp.asarray(
+                    rng.standard_normal((16, cfg.obj_dim)), jnp.float32)
+                s = batch_lib.update(cfg, s, ids, rows)
+            else:
+                s = evacuate(cfg, s)
+            check_invariants(cfg, s)
+        return cfg, s
+
+    cfg, sa = soak()
+    _, sb = soak()
+    assert_states_equal(sa, sb, "egress chaos soak replay")
+    assert int(sa.stats.fetch_failures) > 0
+    assert int(sa.stats.egress_failures) > 0, "egress schedule never fired"
+
+
+def test_egress_faulted_update_writes_nothing():
+    """No-partial-write, write direction: at a tick where every remote
+    WRITE fails (fetches are fine), an update of remote objects under full
+    frame pressure mutates NEITHER tier — the eviction writeback faults,
+    so the fetch is dropped and the displaced slab write is masked too."""
+    # device tick of the k-th batch op is k+1; ticks 1-3 fill the frames,
+    # tick 4 is the faulted update, tick 5 the clean retry
+    sched = faults.Schedule(seed=0, egress_prob=1.0, egress_window=(4, 5))
+    cfg, data, s = mk(faults=sched)
+    for start in (0, 16, 32):           # 6 pages -> all 6 frames occupied
+        s, _ = batch_lib.access(cfg, s, jnp.arange(start, start + 16,
+                                                   dtype=jnp.int32))
+    ids = jnp.arange(48, 64, dtype=jnp.int32)        # two REMOTE pages
+    resident = jnp.arange(0, 48, dtype=jnp.int32)
+    before = peek(cfg, s, ids)
+    before_local = peek(cfg, s, resident)
+    before_vpage_of = np.asarray(s.vpage_of)
+    new_rows = jnp.full((16, cfg.obj_dim), 123.0, jnp.float32)
+    s = batch_lib.update(cfg, s, ids, new_rows)      # tick 4: egress dies
+    check_invariants(cfg, s)
+    assert int(s.stats.egress_failures) > 0, "egress gate never fired"
+    # neither tier moved: no eviction landed, far values intact, and the
+    # local tier still holds exactly the pre-fault bytes
+    np.testing.assert_array_equal(np.asarray(s.vpage_of), before_vpage_of)
+    np.testing.assert_array_equal(np.asarray(peek(cfg, s, ids)),
+                                  np.asarray(before))
+    np.testing.assert_array_equal(np.asarray(peek(cfg, s, resident)),
+                                  np.asarray(before_local))
+    # tick 5 is clean: the retry lands the write
+    s = batch_lib.update(cfg, s, ids, new_rows)
+    np.testing.assert_array_equal(np.asarray(peek(cfg, s, ids)),
+                                  np.asarray(new_rows))
+
+
+def test_egress_faulted_evacuate_moves_nothing():
+    """A fully egress-faulted evacuation skips every victim atomically:
+    no rows move, no page is freed — only ``egress_failures`` records the
+    blocked compactions; the victims stay eligible for a later slice."""
+    cfg0, data, s = mk(num_frames=8)
+    cfg_f, _, _ = mk(num_frames=8,
+                     faults=faults.Schedule(seed=2, egress_prob=1.0))
+    rng = np.random.RandomState(2)
+    # object-path churn fills log pages with mixed-heat objects; threshold
+    # -1 makes every local page a victim (read-only churn keeps garbage
+    # remote, same trick as the evacuation tests in test_system.py)
+    for _ in range(20):
+        s, _ = batch_lib.access(cfg0, s,
+                                jnp.asarray(rng.choice(96, 12), jnp.int32))
+    s_f = evacuate(cfg_f, s, garbage_threshold=-1.0, clear_access=False)
+    s_0 = evacuate(cfg0, s, garbage_threshold=-1.0, clear_access=False)
+    assert int(s_0.stats.evac_pages) > int(s.stats.evac_pages), \
+        "fault-free twin found no victims — the gate was never exercised"
+    assert int(s_f.stats.egress_failures) > 0
+    assert int(s_f.stats.evac_pages) == int(s.stats.evac_pages)
+    for f in s._fields:
+        if f == "stats":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_f, f)), np.asarray(getattr(s, f)),
+            err_msg=f"faulted evacuation mutated PlaneState.{f}")
+    check_invariants(cfg_f, s_f)
+
+
+def test_kv_append_egress_skips_atomically():
+    """A faulted KV append mutates nothing on any shard: no slab row, no
+    kmax/kmin summary, no frame write-through — and a clean-schedule twin
+    proves the same call would have appended."""
+    from repro.core import kvplane
+    mkcfg = lambda fc: kvplane.KVPlaneConfig(
+        kv_heads=1, head_dim=8, page_tokens=4, num_pages=8, num_frames=3,
+        batch=1, sparse_topk=3, fetch_budget=2, dtype=jnp.float32,
+        faults=fc)
+    cfg_f = mkcfg(faults.Schedule(seed=4, egress_prob=1.0))
+    cfg_0 = mkcfg(None)
+    D = 2
+    states = jax.vmap(lambda _: kvplane.init(cfg_0))(jnp.arange(D))
+    kn = jnp.ones((1, 1, 8), jnp.float32)
+    vn = jnp.ones((1, 1, 8), jnp.float32)
+    lengths = jnp.asarray([0], jnp.int32)
+    out_f = kvplane.append_sharded(cfg_f, states, kn, vn, lengths)
+    out_0 = kvplane.append_sharded(cfg_0, states, kn, vn, lengths)
+    for f in states._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_f, f)), np.asarray(getattr(states, f)),
+            err_msg=f"faulted append mutated KVPlaneState.{f}")
+    assert not np.array_equal(np.asarray(out_0.k_slab),
+                              np.asarray(states.k_slab)), \
+        "clean twin appended nothing — the test exercised no write"
+
+
+# ---------------------------------------------------------------------------
+# per-shard circuit breaker (DESIGN.md §6c)
+# ---------------------------------------------------------------------------
+
+def test_per_shard_degmask_healthy_shard_bit_identical():
+    """The [S] degraded-mask program: with shard 0 degraded, every request
+    OWNED by shard 1 — rows, served verdicts and shard 1's state slice —
+    is bit-identical to the fault-free oracle (requests route by static
+    ownership, so a tripped peer cannot perturb a healthy shard's plan).
+    An all-False mask reproduces the plain program exactly (the engine
+    dispatches every breaker state through this one compiled entry)."""
+    base, _, _ = mk(num_objs=192, num_frames=12, num_vpages=80)
+    scfg = shardplane.make_config(base, 2, 16, plane="hybrid")
+    data = jnp.arange(192 * 4, dtype=jnp.float32).reshape(192, 4)
+    fn_deg = shardplane.jitted_access_degmask(scfg, with_served=True)
+    fn_pln = shardplane.jitted_access(scfg, with_served=True)
+    s_a = s_b = s_c = shardplane.create(scfg, data)
+    dmask = jnp.asarray([True, False])
+    none = jnp.zeros((2,), bool)
+    rng = np.random.RandomState(5)
+    degraded_masked = False
+    for t in range(8):
+        ids = jnp.asarray(rng.randint(0, 192, size=(2, 16)), jnp.int32)
+        s_a, r_a, v_a = fn_deg(s_a, ids, dmask)      # shard 0 tripped
+        s_b, r_b, v_b = fn_pln(s_b, ids)             # fault-free oracle
+        s_c, r_c, v_c = fn_deg(s_c, ids, none)       # all-healthy mask
+        np.testing.assert_array_equal(np.asarray(r_c), np.asarray(r_b),
+                                      err_msg=f"all-False mask t={t}")
+        np.testing.assert_array_equal(np.asarray(v_c), np.asarray(v_b))
+        own1 = np.asarray(ids // scfg.shard.num_objs) == 1
+        np.testing.assert_array_equal(np.asarray(r_a)[own1],
+                                      np.asarray(r_b)[own1],
+                                      err_msg=f"healthy-shard rows t={t}")
+        np.testing.assert_array_equal(np.asarray(v_a)[own1],
+                                      np.asarray(v_b)[own1])
+        degraded_masked |= bool((~np.asarray(v_a)[~own1]).any())
+    assert degraded_masked, "degraded shard never masked a request"
+    assert_states_equal(state_lib.shard_slice(s_c, 0),
+                        state_lib.shard_slice(s_b, 0), "all-False shard 0")
+    assert_states_equal(state_lib.shard_slice(s_a, 1),
+                        state_lib.shard_slice(s_b, 1),
+                        "healthy shard under a tripped peer")
+
+
+@needs8
+@pytest.mark.parametrize("shards", [2, 4])
+def test_shard_map_degmask_matches_oracle(shards):
+    """The shard_map build of the degraded-mask program is bit-identical
+    to the vmap oracle — rows, served verdicts and full state — for a
+    mask that trips shard 0 and for the all-healthy mask."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import mesh as mesh_lib
+
+    sched = faults.Schedule(seed=23, fail_prob=0.2, egress_prob=0.2)
+    base, _, _ = mk(num_objs=96 * shards, num_frames=6 * shards,
+                    num_vpages=40 * shards, faults=sched)
+    scfg = shardplane.make_config(base, shards, 16, plane="hybrid")
+    data = jnp.arange(base.num_objs * base.obj_dim, dtype=jnp.float32
+                      ).reshape(base.num_objs, base.obj_dim)
+    s_emu = shardplane.create(scfg, data)
+    mesh = mesh_lib.make_far_mesh(shards)
+    s_dev = jax.device_put(s_emu, jax.tree.map(
+        lambda _: NamedSharding(mesh, P("far")), s_emu))
+    a_emu = shardplane.jitted_access_degmask(scfg, with_served=True)
+    a_dev = shardplane.jitted_access_degmask(scfg, mesh=mesh,
+                                             with_served=True)
+    dmask = jnp.zeros((shards,), bool).at[0].set(True)
+    rng = np.random.RandomState(8)
+    for t in range(6):
+        ids = jnp.asarray(rng.randint(0, base.num_objs, size=(shards, 16)),
+                          jnp.int32)
+        deg = dmask if t % 2 else jnp.zeros((shards,), bool)
+        s_emu, r_emu, v_emu = a_emu(s_emu, ids, deg)
+        s_dev, r_dev, v_dev = a_dev(s_dev, ids, deg)
+        np.testing.assert_array_equal(np.asarray(r_emu), np.asarray(r_dev),
+                                      err_msg=f"rows t={t}")
+        np.testing.assert_array_equal(np.asarray(v_emu), np.asarray(v_dev),
+                                      err_msg=f"served t={t}")
+    assert_states_equal(s_emu, s_dev, f"shard_map degmask S={shards}")
+
+
+def test_engine_per_shard_breaker_isolates_faulty_shard():
+    """Single-shard outage, shards=2: ONLY shard 0's breaker trips (shard
+    1 never sees failure evidence), the healthy shard keeps serving at
+    >=0.9x its fault-free goodput, both breakers close after recovery,
+    and same-seed runs produce identical chaos counters.  The legacy
+    ``breaker_scope="global"`` run drags the healthy shard down with the
+    faulty one."""
+    sched = faults.Schedule(seed=7, outages=((6, 46, 0),))
+    kw = dict(max_retries=1, breaker_threshold=0.5, breaker_probe_every=4)
+
+    def drive(scope, faulted=True):
+        eng, _, _ = mk_engine_pair(
+            shards=2, faults_sched=sched if faulted else faults.NULL,
+            robust_kw=dict(breaker_scope=scope, **kw))
+        open_seen = np.zeros((2,), bool)
+        for s in range(70):
+            ids = np.random.RandomState(s).randint(
+                0, 256, size=16).astype(np.int32)
+            eng.submit(ids)
+            eng.drain()
+            open_seen |= eng.breaker_open_shards
+        eng.flush_retries()
+        return eng, open_seen
+
+    eng, open_seen = drive("shard")
+    assert open_seen[0], "faulty shard's breaker never opened"
+    assert not open_seen[1], "outage leaked into the healthy shard's breaker"
+    assert not eng.breaker_open, "breaker failed to close after recovery"
+    assert eng.counters["breaker_trips"] >= 1
+    assert eng.counters["degraded_ticks"] > 0
+    # healthy-shard goodput: within 10% of the fault-free twin
+    eng_ok, _ = drive("shard", faulted=False)
+    assert (eng.served_per_shard[1]
+            >= 0.9 * eng_ok.served_per_shard[1]), (eng.served_per_shard,
+                                                   eng_ok.served_per_shard)
+    # same seed, same trajectory -> identical chaos accounting
+    eng2, _ = drive("shard")
+    assert eng.counters == eng2.counters
+    np.testing.assert_array_equal(eng.served_per_shard,
+                                  eng2.served_per_shard)
+    # the global breaker degrades BOTH shards: healthy-shard serves drop
+    eng_g, open_g = drive("global")
+    assert open_g.all(), "global scope must trip every shard together"
+    assert eng_g.served_per_shard[1] < eng.served_per_shard[1], \
+        "global breaker did not cost the healthy shard anything"

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs lint: README.md / DESIGN.md must not reference things that do
+not exist.
+
+Checks, over both files:
+
+  * repo-path references (``src/...``, ``tests/...``, ``benchmarks/...``,
+    ``examples/...``, ``.github/...``, ``tools/...``) resolve to real
+    files or directories (glob patterns allowed, must match something);
+  * root-level doc/artifact basenames (``*.md``, ``*.json``, ``*.toml``)
+    exist at the repo root;
+  * dotted module references (``repro.core.faults``) resolve under
+    ``src/``;
+  * every ``§N``/``§Na`` section reference names a section that DESIGN.md
+    actually defines.
+
+Exit 0 clean, exit 1 with one line per dangling reference (CI fails).
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "DESIGN.md"]
+
+PATH_RE = re.compile(
+    r"(?:src|tests|benchmarks|examples|tools|configs|\.github)/"
+    r"[\w./*{},-]*[\w*}]")
+BASENAME_RE = re.compile(r"`([\w.-]+\.(?:md|json|toml|yml))`")
+MODULE_RE = re.compile(r"\brepro(?:\.[a-z_0-9]+)+\b")
+SECTION_REF_RE = re.compile(r"§\s*(\d+[a-z]?)")
+SECTION_DEF_RE = re.compile(r"^#{2,3}\s+(\d+[a-z]?)[.\s]", re.M)
+
+
+def defined_sections() -> set[str]:
+    return set(SECTION_DEF_RE.findall((ROOT / "DESIGN.md").read_text()))
+
+
+def check_path(ref: str) -> bool:
+    ref = ref.rstrip(".,;:")
+    if "{" in ref:          # brace shorthand like fig_{a,b} — expand
+        ref = re.sub(r"\{[^}]*\}", "*", ref)
+    if "*" in ref:
+        return bool(glob.glob(str(ROOT / ref)))
+    return (ROOT / ref).exists()
+
+
+def check_module(ref: str) -> bool:
+    p = ROOT / "src" / Path(*ref.split("."))
+    return p.is_dir() or p.with_suffix(".py").exists()
+
+
+def main() -> int:
+    problems = []
+    sections = defined_sections()
+    for doc in DOCS:
+        text = (ROOT / doc).read_text()
+        for m in PATH_RE.finditer(text):
+            if not check_path(m.group(0)):
+                problems.append(f"{doc}: dangling path {m.group(0)!r}")
+        for m in BASENAME_RE.finditer(text):
+            if not (ROOT / m.group(1)).exists():
+                problems.append(f"{doc}: dangling file {m.group(1)!r}")
+        for m in MODULE_RE.finditer(text):
+            if not check_module(m.group(0)):
+                problems.append(f"{doc}: dangling module {m.group(0)!r}")
+        for m in SECTION_REF_RE.finditer(text):
+            if m.group(1) not in sections:
+                problems.append(
+                    f"{doc}: reference to undefined section §{m.group(1)}")
+    for p in sorted(set(problems)):
+        print(p)
+    if problems:
+        print(f"\n{len(set(problems))} dangling reference(s).",
+              file=sys.stderr)
+        return 1
+    print(f"docs lint OK ({', '.join(DOCS)}; "
+          f"{len(sections)} DESIGN.md sections)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
